@@ -1,0 +1,52 @@
+"""Cipher throughput: the boundary-crossing tax itself.
+
+Not a paper table per se, but the primitive behind Fig. 9's encryption
+overhead: ChaCha20-CTR MB/s for the jnp path, the Pallas kernel (interpret),
+and the host path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import chacha, ctr
+from repro.kernels.chacha20 import ops as kops
+
+
+def _time(f, *args, reps=5):
+    f(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    kw = chacha.key_to_words(bytes(range(32)))
+    nw = chacha.nonce_to_words(b"\x01" * 12)
+    n_mb = 4
+    x = jnp.zeros((n_mb * 1024 * 1024 // 4,), jnp.uint32)
+
+    enc = jax.jit(lambda v: ctr.encrypt_array(v, kw, nw, 0))
+    dt = _time(enc, x)
+    rows = [("chacha20_jnp", dt * 1e6, f"{n_mb / dt:.1f}MB/s")]
+
+    state0 = kops.make_state0(kw, nw, 0)
+    pall = jax.jit(lambda v: kops.chacha20_xor_words(v, state0, impl="pallas", interpret=True))
+    small = jnp.zeros((256 * 1024 // 4,), jnp.uint32)
+    dtp = _time(pall, small, reps=2)
+    rows.append(("chacha20_pallas_interpret", dtp * 1e6, f"{0.25 / dtp:.1f}MB/s"))
+
+    data = b"\x00" * (n_mb * 1024 * 1024)
+    t0 = time.perf_counter()
+    chacha.chacha20_encrypt_bytes(bytes(range(32)), b"\x01" * 12, 0, data)
+    dth = time.perf_counter() - t0
+    rows.append(("chacha20_host_numpy", dth * 1e6, f"{n_mb / dth:.1f}MB/s"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Table II: data volume exchanged per MapReduce step (split/shuffle/
+output), measured from the SCBR router's wire accounting on real jobs."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.kmeans import generate_points
+from repro.pubsub import protocol as pr
+from repro.runtime.jobs import make_cluster, run_kmeans
+
+
+def run():
+    rows = []
+    for n in (1000, 4000, 8000):
+        pts, _ = generate_points(n, 10, seed=4)
+        cluster, client, _ = make_cluster(8)
+        volumes = {"split": 0, "shuffle": 0, "output": 0}
+        orig = cluster.router.publish
+        hdr_key = client.session.header
+
+        def spy(msg, _orig=orig, _vol=volumes):
+            t = msg.open_header(hdr_key)["type"]
+            if t == pr.MAP_DATATYPE:
+                _vol["split"] += msg.wire_bytes
+            elif t == pr.REDUCE_DATATYPE:
+                _vol["shuffle"] += msg.wire_bytes
+            elif t == pr.RESULT:
+                _vol["output"] += msg.wire_bytes
+            return _orig(msg)
+
+        cluster.router.publish = spy
+        _, hist = run_kmeans(cluster, client, pts, 10, n_mappers=4, n_reducers=2,
+                             max_iter=2, threshold=0.0)
+        iters = max(len(hist), 1)
+        rows.append(
+            (f"data_volume_n{n}", 0.0,
+             f"split={volumes['split'] // iters}B,"
+             f"shuffle={volumes['shuffle'] // iters}B,"
+             f"output={volumes['output'] // iters}B")
+        )
+    return rows

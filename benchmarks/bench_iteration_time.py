@@ -1,0 +1,49 @@
+"""Paper Fig. 7: average time per k-means iteration vs input size.
+
+Paper observation: completion time is dominated by n (observations), mildly
+inflected by k; the n=1M point shows super-linear growth from cache misses.
+We sweep n at CPU-feasible sizes and report us/iteration (secure engine,
+encryption on).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import generate_points, make_kmeans_step
+from repro.core.shuffle import SecureShuffleConfig
+from repro.crypto import chacha
+
+
+def _cfg():
+    return SecureShuffleConfig(
+        key_words=chacha.key_to_words(bytes(range(32))),
+        nonce_words=chacha.nonce_to_words(b"\x05" * 12),
+    )
+
+
+def run():
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    rows = []
+    for n in (1000, 10000, 100000):
+        for k in (10, 50):
+            pts, _ = generate_points(n, k, seed=1)
+            pts = jnp.asarray(pts)
+            w = jnp.ones((n,), jnp.float32)
+            centers = pts[:k]
+            step = make_kmeans_step(mesh, secure=_cfg())
+            # two warmup calls: the 2nd recompiles for committed-sharding args
+            centers, _ = step(pts, w, centers)
+            centers, _ = step(pts, w, centers)
+            jax.block_until_ready(centers)
+            iters = 5
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                centers, shift = step(pts, w, centers)
+            jax.block_until_ready(centers)
+            dt = (time.perf_counter() - t0) / iters
+            rows.append((f"kmeans_iter_n{n}_k{k}", dt * 1e6, f"n={n},k={k}"))
+    return rows

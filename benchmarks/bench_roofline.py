@@ -1,0 +1,26 @@
+"""§Roofline emitter: per-cell terms from the dry-run report (reads
+reports/dryrun.json; run the dry-run first)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def run():
+    path = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun.json")
+    if not os.path.exists(path):
+        return [("roofline_report", 0.0, "missing:run_repro.launch.dryrun_first")]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, r in sorted(results.items()):
+        if r.get("status") != "OK":
+            continue
+        rf = r["roofline"]
+        rows.append(
+            (f"roofline_{key.replace('|', '_')}", rf["dominant" ] == "compute" and rf["compute_s"] * 1e6 or 0.0,
+             f"dom={rf['dominant']},c={rf['compute_s']:.3e}s,"
+             f"m={rf['memory_s']:.3e}s,x={rf['collective_s']:.3e}s")
+        )
+    return rows

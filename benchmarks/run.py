@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_convergence     Figs. 5-6  k-means convergence + threshold rule
+  bench_iteration_time  Fig. 7     time/iteration vs input size
+  bench_paging          Fig. 8     EPC-paging (cache miss) cliff
+  bench_overhead        Fig. 9     encryption x enclave 4-combo overheads
+  bench_data_volume     Table II   split/shuffle/output bytes per iteration
+  bench_tcb             Table I    trusted-code-base sizes (+ <30 LOC scripts)
+  bench_crypto          cipher throughput (the boundary tax primitive)
+  bench_roofline        §Roofline terms from the dry-run report
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+import sys
+import traceback
+
+from benchmarks import (
+    bench_convergence,
+    bench_crypto,
+    bench_data_volume,
+    bench_iteration_time,
+    bench_overhead,
+    bench_paging,
+    bench_roofline,
+    bench_tcb,
+)
+
+MODULES = [
+    bench_tcb,
+    bench_crypto,
+    bench_convergence,
+    bench_iteration_time,
+    bench_paging,
+    bench_overhead,
+    bench_data_volume,
+    bench_roofline,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{mod.__name__},NaN,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

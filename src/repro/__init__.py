@@ -1,0 +1,18 @@
+"""repro — secure MapReduce substrate for multi-pod JAX training/serving.
+
+Reproduction (TPU-adapted) of: Pires, Gavril, Felber, Onica, Pasin,
+"A lightweight MapReduce framework for secure processing with SGX" (2017).
+
+Layers (bottom-up):
+  crypto/    ChaCha20-CTR cipher, MAC, key provisioning ("attestation")
+  kernels/   Pallas TPU kernels (chacha20 keystream/XOR, fused k-means assign)
+  core/      the secure MapReduce engine (map/combine/shuffle/reduce) +
+             SecVM (encrypted-bytecode UDFs) + SecurePager (EPC analogue)
+  pubsub/    SCBR content-based router with in-enclave subscription matching
+  runtime/   simulated multi-node cluster: scheduling, fault tolerance
+  models/    the 10 assigned architectures (dense / MoE / hybrid / ssm / ...)
+  train/ serve/ optim/ data/ parallel/ checkpoint/   framework substrates
+  launch/    production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "0.1.0"

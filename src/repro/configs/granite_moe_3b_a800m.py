@@ -1,0 +1,25 @@
+"""granite-moe-3b-a800m — [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+Assignment: 32L d_model=1536 24H (GQA kv=8) d_ff=512 vocab=49155, MoE 40e
+top-8. (The assignment line also mentions "32 experts"; we follow the primary
+"MoE 40e top-8" spec and record the discrepancy here.)
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    moe_d_ff=512,
+    vocab_size=49155,
+    n_experts=40,
+    n_experts_per_tok=8,
+    attn_chunk=2048,
+    moe_remat="save_shuffle",  # §Perf cell C: -14% mem, -17% coll, -28% compute
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+)

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: a secure MapReduce engine in JAX.
+
+Two execution levels implement the same model:
+  * device level (`engine.py`): map/combine/shuffle/reduce inside one jitted
+    shard_map program; the shuffle is a keyed `all_to_all` whose payload is
+    ChaCha20-encrypted before leaving the chip ("enclave") in secure mode.
+  * cluster level (`repro.runtime`): the paper's pub/sub-coordinated client/
+    worker protocol over encrypted splits, with fault tolerance.
+
+Plus the two SGX-specific mechanisms, adapted:
+  * `secvm.py`  — code confidentiality: user logic as encrypted bytecode run
+    by a generic in-graph interpreter (the Lua-VM-in-enclave analogue).
+  * `paging.py` — SecurePager, the EPC paging analogue (trusted-memory
+    budget; evict=>encrypt+MAC, fetch=>decrypt+verify+freshness).
+"""
+
+from repro.core.engine import MapReduceSpec, SecureShuffleConfig, run_mapreduce
+
+__all__ = ["MapReduceSpec", "SecureShuffleConfig", "run_mapreduce"]

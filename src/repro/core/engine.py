@@ -1,0 +1,101 @@
+"""Device-level secure MapReduce engine (shard_map pipeline).
+
+One jitted program runs the full paper pipeline on a mesh axis:
+
+    split (sharded input)
+      └─ map_fn        per-shard, vectorized ("mapper enclave")
+      └─ combine_fn    optional local pre-aggregation (paper's combiner)
+      └─ bucket_pack   hash(key) % R  →  (R, C, ...) send buffer
+      └─ keyed_all_to_all   [+ ChaCha20 on the wire in secure mode]
+      └─ reduce_fn     per-shard over received pairs ("reducer enclave")
+
+All user functions are vectorized fixed-shape JAX functions (or SecVM
+programs via `repro.core.secvm.secvm_map_fn` for code confidentiality).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.shuffle import SecureShuffleConfig, bucket_pack, keyed_all_to_all
+
+
+def default_hash(keys):
+    """Knuth multiplicative mix — the paper's `hash(key, rcount)` slot."""
+    return (keys.astype(jnp.uint32) * jnp.uint32(2654435761)) >> 1
+
+
+def identity_hash(keys):
+    return keys.astype(jnp.uint32)
+
+
+@dataclass(frozen=True)
+class MapReduceSpec:
+    """A MapReduce job over fixed-shape shards.
+
+    map_fn(keys, values)            -> (mapped_keys, mapped_values)
+    combine_fn(keys, values)        -> (keys, values)  [optional, local]
+    reduce_fn(keys, values, valid)  -> per-shard output (typically followed by
+                                       a psum/all_gather the caller encodes
+                                       inside reduce_fn itself)
+    hash_fn(keys) -> u32            destination = hash_fn(k) % R
+    capacity: per-destination slots C (like MoE capacity factor).
+    """
+
+    map_fn: Callable[[Any, Any], tuple]
+    reduce_fn: Callable[[Any, Any, Any], Any]
+    combine_fn: Callable[[Any, Any], tuple] | None = None
+    hash_fn: Callable = default_hash
+    capacity: int = 0  # 0 → auto: ceil(n_mapped / R) * 2
+
+
+def _shard_body(keys, values, *, spec: MapReduceSpec, axis_name: str, n_shards: int,
+                secure: SecureShuffleConfig | None):
+    mk, mv = spec.map_fn(keys, values)
+    if spec.combine_fn is not None:
+        mk, mv = spec.combine_fn(mk, mv)
+    n_mapped = mk.shape[0]
+    capacity = spec.capacity or max(1, -(-n_mapped // n_shards) * 2)
+
+    bucket = (spec.hash_fn(mk) % jnp.uint32(n_shards)).astype(jnp.int32)
+    bk, bv, dropped = bucket_pack(mk, bucket, mv, n_shards, capacity)
+
+    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure)
+    rk, rv = recv["k"], recv["v"]
+
+    flat_k = rk.reshape(-1)
+    flat_v = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), rv)
+    valid = flat_k >= 0
+    out = spec.reduce_fn(flat_k, flat_v, valid)
+    return out, lax.psum(dropped, axis_name)
+
+
+def run_mapreduce(
+    spec: MapReduceSpec,
+    keys,
+    values,
+    mesh: Mesh,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+    out_specs=P(),
+):
+    """Run the pipeline over `mesh[axis_name]`. Inputs are host-global arrays
+    sharded on their leading dim; output spec defaults to replicated (the
+    usual case: reduce_fn ends in a psum/all_gather).
+
+    Returns (output, n_dropped) — n_dropped must be 0 for a lossless job.
+    """
+    n_shards = mesh.shape[axis_name]
+    body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards, secure=secure)
+    in_specs = (P(axis_name), jax.tree.map(lambda _: P(axis_name), values))
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=(out_specs, P()), check_vma=False
+    )
+    return jax.jit(fn)(keys, values)

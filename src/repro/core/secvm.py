@@ -1,0 +1,202 @@
+"""SecVM — code confidentiality via an in-graph bytecode interpreter.
+
+The paper ports a Lua VM *into the enclave* so user map/reduce code ships as
+encrypted scripts the host never sees. XLA has no enclave, but it has the
+same structural opportunity: compile ONE generic interpreter; ship the user
+program as *data* (encrypted int32 bytecode + f32 constant pool), decrypted
+and executed inside the jitted computation. The lowered HLO is identical for
+any two programs of the same length — the platform observes the interpreter,
+not the algorithm (tested in tests/test_secvm.py).
+
+Machine model: NREG vector registers of shape (lanes,) f32; a program is a
+(L, 4) int32 array of [opcode, dst, a, b]; constants live in a separate pool
+(register-indexed LOADC). Execution is a `lax.fori_loop` whose body applies
+`lax.switch` over opcodes — one dynamic dispatch per instruction, fully
+shape-static.
+
+This is deliberately a small machine (enough for elementwise math — feature
+transforms, distances, activations); the fast path for production jobs
+remains plain JAX map/reduce functions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.crypto.ctr import decrypt_array, encrypt_array
+
+NREG = 16
+
+OPS = {
+    "NOP": 0,
+    "MOV": 1,    # r[d] = r[a]
+    "LOADC": 2,  # r[d] = const[b]
+    "ADD": 3,    # r[d] = r[a] + r[b]
+    "SUB": 4,
+    "MUL": 5,
+    "DIV": 6,
+    "MIN": 7,
+    "MAX": 8,
+    "NEG": 9,
+    "ABS": 10,
+    "SQRT": 11,
+    "EXP": 12,
+    "LOG": 13,
+    "FLOOR": 14,
+    "CMPLT": 15,  # r[d] = r[a] < r[b] ? 1 : 0
+    "FMA": 16,    # r[d] = r[d] + r[a] * r[b]
+    "MOD": 17,    # r[d] = r[a] mod r[b]
+}
+N_OPS = len(OPS)
+
+
+@dataclass(frozen=True)
+class Program:
+    """Assembled SecVM program."""
+
+    code: np.ndarray  # (L, 4) int32
+    consts: np.ndarray  # (NC,) float32
+    out_reg: int = 0
+
+    @property
+    def length(self) -> int:
+        return int(self.code.shape[0])
+
+
+def assemble(instrs: Sequence[tuple], consts: Sequence[float] = (), out_reg: int = 0) -> Program:
+    """instrs: [("ADD", d, a, b), ("LOADC", d, 0, const_idx), ...]"""
+    code = np.zeros((len(instrs), 4), np.int32)
+    for i, ins in enumerate(instrs):
+        name, *ops = ins
+        code[i, 0] = OPS[name]
+        code[i, 1 : 1 + len(ops)] = ops
+    return Program(code=code, consts=np.asarray(consts, np.float32), out_reg=out_reg)
+
+
+def _exec_instr(regs, consts, instr):
+    op, d, a, b = instr[0], instr[1], instr[2], instr[3]
+    ra = regs[a]
+    rb = regs[b]
+    rd = regs[d]
+    cb = consts[b]
+
+    branches = [
+        lambda: rd,  # NOP
+        lambda: ra,  # MOV
+        lambda: jnp.broadcast_to(cb, rd.shape),  # LOADC
+        lambda: ra + rb,
+        lambda: ra - rb,
+        lambda: ra * rb,
+        lambda: ra / rb,
+        lambda: jnp.minimum(ra, rb),
+        lambda: jnp.maximum(ra, rb),
+        lambda: -ra,
+        lambda: jnp.abs(ra),
+        lambda: jnp.sqrt(ra),
+        lambda: jnp.exp(ra),
+        lambda: jnp.log(ra),
+        lambda: jnp.floor(ra),
+        lambda: (ra < rb).astype(jnp.float32),
+        lambda: rd + ra * rb,
+        lambda: ra - jnp.floor(ra / rb) * rb,
+    ]
+    val = lax.switch(jnp.clip(op, 0, N_OPS - 1), branches)
+    return regs.at[d].set(val)
+
+
+def run_program(code, consts, inputs, out_reg=0, length: int | None = None):
+    """Execute bytecode on vector lanes.
+
+    code:   (L, 4) int32 (may be a traced array — e.g. freshly decrypted)
+    consts: (NC,) f32
+    inputs: (n_in, lanes) f32 loaded into r1..r{n_in} (r0 zeroed: output acc)
+    """
+    lanes = inputs.shape[1]
+    regs = jnp.zeros((NREG, lanes), jnp.float32)
+    regs = regs.at[1 : 1 + inputs.shape[0]].set(inputs)
+    n = length if length is not None else code.shape[0]
+
+    def body(i, regs):
+        return _exec_instr(regs, consts, code[i])
+
+    regs = lax.fori_loop(0, n, body, regs)
+    return regs[out_reg]
+
+
+# ---------------------------------------------------------------------------
+# Encrypted-program transport ("provisioning of code", paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def encrypt_program(prog: Program, key_words, nonce_words, counter0=0):
+    """Returns (code_ct, consts_ct) — ciphertext arrays safe to hand the host."""
+    code_ct = encrypt_array(jnp.asarray(prog.code), key_words, nonce_words, counter0)
+    c_blocks = -(-prog.code.size // 16)
+    consts_ct = encrypt_array(
+        jnp.asarray(prog.consts), key_words, nonce_words, counter0 + c_blocks
+    )
+    return code_ct, consts_ct
+
+
+def run_encrypted(code_ct, consts_ct, inputs, key_words, nonce_words, counter0=0, out_reg=0):
+    """Decrypt *inside* the computation and execute. jit-safe end to end."""
+    code = decrypt_array(code_ct, key_words, nonce_words, counter0)
+    c_blocks = -(-code_ct.size // 16)
+    consts = decrypt_array(consts_ct, key_words, nonce_words, counter0 + c_blocks)
+    return run_program(code, consts, inputs, out_reg=out_reg)
+
+
+# -- python oracle for tests --------------------------------------------------
+
+
+def run_oracle(prog: Program, inputs: np.ndarray) -> np.ndarray:
+    regs = np.zeros((NREG, inputs.shape[1]), np.float32)
+    regs[1 : 1 + inputs.shape[0]] = inputs
+    inv = {v: k for k, v in OPS.items()}
+    with np.errstate(all="ignore"):
+        for op, d, a, b in prog.code:
+            name = inv[int(op)]
+            if name == "NOP":
+                continue
+            elif name == "MOV":
+                regs[d] = regs[a]
+            elif name == "LOADC":
+                regs[d] = prog.consts[b]
+            elif name == "ADD":
+                regs[d] = regs[a] + regs[b]
+            elif name == "SUB":
+                regs[d] = regs[a] - regs[b]
+            elif name == "MUL":
+                regs[d] = regs[a] * regs[b]
+            elif name == "DIV":
+                regs[d] = regs[a] / regs[b]
+            elif name == "MIN":
+                regs[d] = np.minimum(regs[a], regs[b])
+            elif name == "MAX":
+                regs[d] = np.maximum(regs[a], regs[b])
+            elif name == "NEG":
+                regs[d] = -regs[a]
+            elif name == "ABS":
+                regs[d] = np.abs(regs[a])
+            elif name == "SQRT":
+                regs[d] = np.sqrt(regs[a])
+            elif name == "EXP":
+                regs[d] = np.exp(regs[a])
+            elif name == "LOG":
+                regs[d] = np.log(regs[a])
+            elif name == "FLOOR":
+                regs[d] = np.floor(regs[a])
+            elif name == "CMPLT":
+                regs[d] = (regs[a] < regs[b]).astype(np.float32)
+            elif name == "FMA":
+                regs[d] = regs[d] + regs[a] * regs[b]
+            elif name == "MOD":
+                regs[d] = regs[a] - np.floor(regs[a] / regs[b]) * regs[b]
+    return regs[prog.out_reg]

@@ -1,0 +1,169 @@
+"""Keyed shuffle: fixed-shape bucketing + (optionally encrypted) all_to_all.
+
+The paper's mappers route each (k, v) to reducer `hash(k) % rcount` and the
+framework "handles all the communication aspects". On a TPU mesh the shuffle
+is a single `all_to_all` over the shuffle axis; because shapes must be static,
+each mapper packs its pairs into an (R, C, ...) send buffer (R = reducers on
+the axis, C = per-destination capacity) exactly like MoE capacity-factor
+dispatch. Overflow is counted and surfaced, never silently lost.
+
+Secure mode encrypts the send buffer *before* the collective and decrypts
+after: ciphertext is what crosses the chip boundary ("enclave exit"), exactly
+the paper's trust model for the mapper→reducer network. Counter-space layout
+guarantees (key, nonce, counter) uniqueness:
+  nonce  = base_nonce XOR source_index        (word 0)
+  ctr    = ctr0 + leaf_offset + dest_row * blocks_per_row(leaf)
+so the receiver of row s (sent by source s while it sat at row `my_index` of
+s's buffer) can reconstruct the exact keystream without any key exchange
+beyond the session key.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.crypto import ctr as _ctr
+from repro.crypto.chacha import chacha20_keystream_words
+from repro.crypto.ctr import words_for
+
+
+@dataclass(frozen=True)
+class SecureShuffleConfig:
+    """Session material for encrypting shuffle traffic (paper: k_shuffle)."""
+
+    key_words: Any  # (8,) u32
+    nonce_words: Any  # (3,) u32 base nonce; word 0 is XORed with source index
+    counter0: int = 0
+
+
+def bucket_pack(keys, bucket, values, n_buckets: int, capacity: int,
+                return_positions: bool = False):
+    """Pack (key, value) pairs into a fixed (R, C, ...) per-destination buffer.
+
+    Args:
+      keys:    (n,) int32; entries with key < 0 are padding (invalid).
+      bucket:  (n,) int32 destination bucket in [0, n_buckets) for each item.
+      values:  pytree of arrays with leading dim n.
+      capacity: per-bucket slot count C.
+      return_positions: also return, per input item, its flat slot index in
+        [0, R*C) (or R*C when dropped/invalid) — the inverse map used by MoE
+        combine to fetch each token's expert output after the return shuffle.
+
+    Returns:
+      out_keys   (R, C) int32, -1 where empty,
+      out_values pytree with leading dims (R, C),
+      n_dropped  () int32 — items lost to capacity overflow
+      [, positions (n,) int32].
+    """
+    n = keys.shape[0]
+    valid = keys >= 0
+    b = jnp.where(valid, bucket, n_buckets)  # invalid items sort last
+    order = jnp.argsort(b, stable=True)
+    b_sorted = b[order]
+    # position within bucket: i - first occurrence of this bucket value
+    first = jnp.searchsorted(b_sorted, b_sorted, side="left")
+    pos = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+    in_range = (b_sorted < n_buckets) & (pos < capacity)
+    dest = jnp.where(in_range, b_sorted * capacity + pos, n_buckets * capacity)
+    n_dropped = jnp.sum((b_sorted < n_buckets) & (pos >= capacity)).astype(jnp.int32)
+
+    def scatter(x_sorted, fill):
+        out = jnp.full((n_buckets * capacity + 1,) + x_sorted.shape[1:], fill, x_sorted.dtype)
+        out = out.at[dest].set(x_sorted)
+        return out[:-1].reshape((n_buckets, capacity) + x_sorted.shape[1:])
+
+    out_keys = scatter(keys[order], jnp.int32(-1))
+    out_values = jax.tree.map(lambda v: scatter(v[order], jnp.zeros((), v.dtype)), values)
+    if not return_positions:
+        return out_keys, out_values, n_dropped
+    positions = jnp.full((n,), n_buckets * capacity, jnp.int32).at[order].set(
+        dest.astype(jnp.int32)
+    )
+    return out_keys, out_values, n_dropped, positions
+
+
+def _row_blocks(leaf_row_shape, dtype) -> int:
+    """ChaCha blocks consumed by one (C, ...) row of an (R, C, ...) leaf."""
+    return -(-words_for(leaf_row_shape, dtype) // 16)
+
+
+def _keystream_rows(cfg: SecureShuffleConfig, nonce_ids, ctr_rows, offset, blocks, n_words):
+    """Per-row keystream: row i uses nonce^nonce_ids[i], ctr offset+ctr_rows[i]·blocks."""
+    base_nonce = jnp.asarray(cfg.nonce_words, jnp.uint32)
+
+    def one(nid, crow):
+        nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
+        return chacha20_keystream_words(
+            cfg.key_words, nonce, offset + crow * jnp.uint32(blocks), n_words
+        )
+
+    return jax.vmap(one)(nonce_ids, ctr_rows)
+
+
+def _pack_wire(tree):
+    """Bitcast every (R, C, ...) leaf into an (R, n_words) u32 wire form.
+
+    Ciphertext must never travel in a float dtype: XLA's bf16/f32 emulation
+    may quiet NaN payloads in transit, corrupting bits. The wire format is
+    opaque u32; shapes/dtypes are static metadata used to unpack.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    wires, meta = [], []
+    for leaf in leaves:
+        pad = _ctr.pad_for(leaf.shape[1:], leaf.dtype)
+        words = jax.vmap(lambda row: _ctr._to_words(row)[0])(leaf)
+        wires.append(words)
+        meta.append((leaf.shape, leaf.dtype, pad))
+    return wires, meta, treedef
+
+
+def _unpack_wire(wires, meta, treedef):
+    leaves = []
+    for words, (shape, dtype, pad) in zip(wires, meta):
+        row = jax.vmap(lambda w: _ctr._from_words(w, shape[1:], dtype, pad))(words)
+        leaves.append(row)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows):
+    out = []
+    offset = jnp.uint32(cfg.counter0)
+    for words, (shape, dtype, _pad) in zip(wires, meta):
+        r, n_words = words.shape
+        blocks = _row_blocks(shape[1:], dtype)
+        ks = _keystream_rows(cfg, nonce_ids, ctr_rows, offset, blocks, n_words)
+        out.append(words ^ ks)
+        offset = offset + jnp.uint32(blocks * r)
+    return out
+
+
+def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = None):
+    """all_to_all every (R, C, ...) leaf; row i of the result came from source i.
+
+    In secure mode leaves are packed to u32 wire words, encrypted, exchanged,
+    decrypted, and unpacked — only ciphertext crosses the inter-chip link.
+    """
+    if secure is None:
+        return jax.tree.map(lambda x: lax.all_to_all(x, axis_name, 0, 0, tiled=True), tree)
+
+    r = jax.tree.leaves(tree)[0].shape[0]
+    idx = lax.axis_index(axis_name).astype(jnp.uint32)
+    wires, meta, treedef = _pack_wire(tree)
+
+    # sender: nonce <- XOR my index; counter row <- destination row
+    my_id = jnp.broadcast_to(idx, (r,))
+    dest_rows = jnp.arange(r, dtype=jnp.uint32)
+    wires = _crypt_wires(wires, meta, secure, my_id, dest_rows)
+
+    wires = [lax.all_to_all(w, axis_name, 0, 0, tiled=True) for w in wires]
+
+    # receiver: row s came from source s; at the source it sat at row my_idx
+    src_ids = jnp.arange(r, dtype=jnp.uint32)
+    my_rows = jnp.broadcast_to(idx, (r,))
+    wires = _crypt_wires(wires, meta, secure, src_ids, my_rows)
+    return _unpack_wire(wires, meta, treedef)

@@ -1,0 +1,60 @@
+"""Word count — the paper's Listing 1/2 example, on the secure engine.
+
+The paper's Lua mapper emits (word, 1), the combiner sums value lists per
+key, `hash(key, rcount)` picks the reducer, and the reducer sums again. Here
+"words" are token ids over a fixed vocabulary; the combiner is a local
+bincount so the shuffle carries at most |V| pairs per mapper — the same
+role json-encoded value lists play in the paper.
+
+User code (`map_fn`/`combine_fn`/`reduce_fn` below) is ~20 lines — matching
+the paper's "<30 LOC" claim; `benchmarks/bench_tcb.py` counts it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.engine import MapReduceSpec, identity_hash, run_mapreduce
+from repro.core.shuffle import SecureShuffleConfig
+
+
+def wordcount(
+    tokens,
+    vocab_size: int,
+    mesh: Mesh,
+    *,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+):
+    """Histogram of `tokens` (int32, sharded) over [0, vocab_size)."""
+
+    def map_fn(keys, values):  # emit (word, 1)
+        return keys, values
+
+    def combine_fn(keys, values):  # local bincount -> (vocab, count) pairs
+        counts = jax.ops.segment_sum(values, jnp.where(keys >= 0, keys, 0), num_segments=vocab_size)
+        ks = jnp.arange(vocab_size, dtype=jnp.int32)
+        ks = jnp.where(counts > 0, ks, -1)  # empty words: padding
+        return ks, counts
+
+    def reduce_fn(keys, values, valid):  # sum grouped values
+        seg = jnp.where(valid, keys, 0)
+        out = jax.ops.segment_sum(jnp.where(valid, values, 0.0), seg, num_segments=vocab_size)
+        return lax.psum(out, axis_name)
+
+    spec = MapReduceSpec(
+        map_fn=map_fn,
+        combine_fn=combine_fn,
+        reduce_fn=reduce_fn,
+        hash_fn=identity_hash,  # paper: first byte of key % rcount
+        capacity=-(-vocab_size // mesh.shape[axis_name]),
+    )
+    tokens = jnp.asarray(tokens, jnp.int32)
+    ones = jnp.ones(tokens.shape, jnp.float32)
+    counts, dropped = run_mapreduce(
+        spec, tokens, ones, mesh, axis_name=axis_name, secure=secure
+    )
+    return counts, dropped

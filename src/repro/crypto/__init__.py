@@ -1,0 +1,40 @@
+"""Cryptographic substrate: ChaCha20-CTR stream cipher, universal MAC, keys.
+
+The paper uses AES-CTR-128 on AES-NI hardware. TPUs have no AES analogue
+(byte-table S-boxes are gather-hostile), so the cipher is ChaCha20 (RFC 8439):
+an ARX design that maps 1:1 onto 32-bit integer vector lanes. The CTR security
+model (keystream XOR, nonce+counter uniqueness) is identical.
+
+Two implementations, cross-checked in tests:
+  * `chacha` — vectorized jnp (in-graph, differentiably opaque) + numpy host path
+  * `kernels/chacha20` — the Pallas TPU kernel (validated in interpret mode)
+"""
+
+from repro.crypto.chacha import (
+    chacha20_block_words,
+    chacha20_encrypt_bytes,
+    chacha20_keystream_words,
+    key_to_words,
+    nonce_to_words,
+)
+from repro.crypto.ctr import decrypt_array, decrypt_tree, encrypt_array, encrypt_tree
+from repro.crypto.mac import mac_tag_host, mac_tag_words, mac_verify_host
+from repro.crypto.keys import KeyHierarchy, SessionKeys, derive_key
+
+__all__ = [
+    "chacha20_block_words",
+    "chacha20_encrypt_bytes",
+    "chacha20_keystream_words",
+    "key_to_words",
+    "nonce_to_words",
+    "encrypt_array",
+    "decrypt_array",
+    "encrypt_tree",
+    "decrypt_tree",
+    "mac_tag_words",
+    "mac_tag_host",
+    "mac_verify_host",
+    "KeyHierarchy",
+    "SessionKeys",
+    "derive_key",
+]

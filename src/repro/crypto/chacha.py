@@ -1,0 +1,160 @@
+"""ChaCha20 (RFC 8439) — vectorized JAX implementation + numpy host path.
+
+State (16 u32 words):
+    0..3   constants "expa" "nd 3" "2-by" "te k"
+    4..11  key (8 words, little-endian)
+    12     block counter
+    13..15 nonce (3 words, little-endian)
+
+`chacha20_block_words` is the pure-jnp oracle for the Pallas kernel
+(`repro.kernels.chacha20`), and the workhorse for in-graph encryption.
+The numpy variant (`_np` suffix) serves host-side message encryption in the
+pub/sub layer; both are checked against the RFC 8439 test vectors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+CONSTANT_WORDS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)
+
+# Quarter-round schedule: 4 column rounds then 4 diagonal rounds.
+_QR_SCHEDULE = (
+    (0, 4, 8, 12),
+    (1, 5, 9, 13),
+    (2, 6, 10, 14),
+    (3, 7, 11, 15),
+    (0, 5, 10, 15),
+    (1, 6, 11, 12),
+    (2, 7, 8, 13),
+    (3, 4, 9, 14),
+)
+
+
+def key_to_words(key: bytes) -> np.ndarray:
+    """32-byte key -> (8,) u32 little-endian words."""
+    if len(key) != 32:
+        raise ValueError(f"ChaCha20 key must be 32 bytes, got {len(key)}")
+    return np.frombuffer(key, dtype="<u4").copy()
+
+
+def nonce_to_words(nonce: bytes) -> np.ndarray:
+    """12-byte nonce -> (3,) u32 little-endian words."""
+    if len(nonce) != 12:
+        raise ValueError(f"ChaCha20 nonce must be 12 bytes, got {len(nonce)}")
+    return np.frombuffer(nonce, dtype="<u4").copy()
+
+
+# ---------------------------------------------------------------------------
+# jnp implementation (vectorized over blocks)
+# ---------------------------------------------------------------------------
+
+
+def _rotl(x, n: int):
+    return (x << n) | (x >> (32 - n))
+
+
+def _double_round(xs):
+    for a, b, c, d in _QR_SCHEDULE:
+        xa, xb, xc, xd = xs[a], xs[b], xs[c], xs[d]
+        xa = xa + xb
+        xd = _rotl(xd ^ xa, 16)
+        xc = xc + xd
+        xb = _rotl(xb ^ xc, 12)
+        xa = xa + xb
+        xd = _rotl(xd ^ xa, 8)
+        xc = xc + xd
+        xb = _rotl(xb ^ xc, 7)
+        xs[a], xs[b], xs[c], xs[d] = xa, xb, xc, xd
+    return xs
+
+
+def chacha20_block_words(key_words, counters, nonce_words):
+    """Vectorized ChaCha20 block function.
+
+    Args:
+      key_words:   (8,)  u32
+      counters:    (B,)  u32 — one block counter per output block
+      nonce_words: (3,)  u32
+
+    Returns: (B, 16) u32 keystream words (little-endian serialization order).
+    """
+    key_words = jnp.asarray(key_words, dtype=jnp.uint32)
+    counters = jnp.asarray(counters, dtype=jnp.uint32)
+    nonce_words = jnp.asarray(nonce_words, dtype=jnp.uint32)
+    b = counters.shape[0]
+
+    init = []
+    for w in CONSTANT_WORDS:
+        init.append(jnp.full((b,), w, dtype=jnp.uint32))
+    for i in range(8):
+        init.append(jnp.broadcast_to(key_words[i], (b,)))
+    init.append(counters)
+    for i in range(3):
+        init.append(jnp.broadcast_to(nonce_words[i], (b,)))
+
+    xs = list(init)
+    for _ in range(10):
+        xs = _double_round(xs)
+    out = [x + x0 for x, x0 in zip(xs, init)]
+    return jnp.stack(out, axis=-1)  # (B, 16)
+
+
+def chacha20_keystream_words(key_words, nonce_words, counter0, n_words: int):
+    """Keystream of `n_words` u32 words starting at block counter `counter0`."""
+    n_blocks = -(-n_words // 16)
+    counters = jnp.uint32(counter0) + jnp.arange(n_blocks, dtype=jnp.uint32)
+    ks = chacha20_block_words(key_words, counters, nonce_words)
+    return ks.reshape(-1)[:n_words]
+
+
+# ---------------------------------------------------------------------------
+# numpy host path (pub/sub wire encryption; no device involvement)
+# ---------------------------------------------------------------------------
+
+
+def _chacha20_blocks_np(key_words: np.ndarray, counters: np.ndarray, nonce_words: np.ndarray) -> np.ndarray:
+    b = counters.shape[0]
+    xs = np.empty((16, b), dtype=np.uint32)
+    for i, w in enumerate(CONSTANT_WORDS):
+        xs[i] = w
+    for i in range(8):
+        xs[4 + i] = key_words[i]
+    xs[12] = counters
+    for i in range(3):
+        xs[13 + i] = nonce_words[i]
+    init = xs.copy()
+
+    def rotl(x, n):
+        return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+    with np.errstate(over="ignore"):
+        for _ in range(10):
+            for a, bq, c, d in _QR_SCHEDULE:
+                xs[a] += xs[bq]
+                xs[d] = rotl(xs[d] ^ xs[a], 16)
+                xs[c] += xs[d]
+                xs[bq] = rotl(xs[bq] ^ xs[c], 12)
+                xs[a] += xs[bq]
+                xs[d] = rotl(xs[d] ^ xs[a], 8)
+                xs[c] += xs[d]
+                xs[bq] = rotl(xs[bq] ^ xs[c], 7)
+        xs += init
+    return xs.T  # (B, 16)
+
+
+def chacha20_encrypt_bytes(key: bytes, nonce: bytes, counter0: int, data: bytes) -> bytes:
+    """Host-side ChaCha20-CTR over raw bytes (encrypt == decrypt)."""
+    kw = key_to_words(key)
+    nw = nonce_to_words(nonce)
+    n = len(data)
+    n_blocks = -(-n // 64) if n else 0
+    if n_blocks == 0:
+        return b""
+    counters = (np.uint32(counter0) + np.arange(n_blocks, dtype=np.uint32)).astype(np.uint32)
+    ks = _chacha20_blocks_np(kw, counters, nw)  # (B, 16) u32
+    ks_bytes = ks.astype("<u4").tobytes()[:n]
+    buf = np.frombuffer(data, dtype=np.uint8) ^ np.frombuffer(ks_bytes, dtype=np.uint8)
+    return buf.tobytes()

@@ -1,0 +1,127 @@
+"""Counter-mode encryption of JAX arrays and pytrees.
+
+Arbitrary-dtype arrays are bitcast to unsigned words, widened to a u32 stream,
+XORed with the ChaCha20 keystream, and narrowed back. Encryption and
+decryption are the same XOR; both directions are jit-safe so ciphertext can be
+decrypted *inside* a compiled step ("inside the enclave") — the paper's model
+of data that is plaintext only within the trusted boundary.
+
+Counter-space layout: every logical payload gets a distinct (nonce, counter0)
+pair from `repro.crypto.keys`; within a payload, block counters increase
+sequentially. Pytrees allocate disjoint counter ranges per leaf so the whole
+tree is one logical message.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.chacha import chacha20_keystream_words
+
+_UINT_FOR_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def words_for(shape, dtype) -> int:
+    """Number of u32 keystream words needed to cover an array."""
+    nbytes = math.prod(shape) * jnp.dtype(dtype).itemsize
+    return -(-nbytes // 4)
+
+
+def pad_for(shape, dtype) -> int:
+    """Static narrow-element pad count `_to_words` will use for this shape."""
+    width = jnp.dtype(dtype).itemsize
+    if width >= 4:
+        return 0
+    per = 4 // width
+    return (-math.prod(shape)) % per
+
+
+def _to_words(x: jax.Array):
+    """Bitcast + pack an arbitrary array into a (n_words,) u32 stream."""
+    dt = x.dtype
+    width = dt.itemsize
+    if width == 8:
+        # 64-bit types: view as pairs of u32 via bitcast to u32 with trailing dim.
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32).reshape(-1)
+        return u, 0
+    u = jax.lax.bitcast_convert_type(x, _UINT_FOR_WIDTH[width]).reshape(-1)
+    if width == 4:
+        return u, 0
+    per = 4 // width
+    pad = (-u.shape[0]) % per
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad,), u.dtype)])
+    u = u.reshape(-1, per).astype(jnp.uint32)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(8 * width)
+    words = (u << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+    return words, pad
+
+
+def _from_words(words: jax.Array, shape, dtype, pad: int):
+    dt = jnp.dtype(dtype)
+    width = dt.itemsize
+    if width == 8:
+        u = words.reshape(tuple(shape) + (2,))
+        return _bitcast64(u, dt, shape)
+    if width == 4:
+        u = words.reshape(shape) if dt == jnp.uint32 else jax.lax.bitcast_convert_type(words, dt).reshape(shape)
+        return u
+    per = 4 // width
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(8 * width)
+    narrow = ((words[:, None] >> shifts[None, :]) & jnp.uint32((1 << (8 * width)) - 1)).astype(
+        _UINT_FOR_WIDTH[width]
+    )
+    narrow = narrow.reshape(-1)
+    if pad:
+        narrow = narrow[:-pad]
+    return jax.lax.bitcast_convert_type(narrow.reshape(shape), dt) if dt != narrow.dtype else narrow.reshape(shape)
+
+
+def _bitcast64(u32_pairs, dt, shape):
+    # (..., 2) u32 -> 64-bit dtype. bitcast_convert_type collapses the
+    # trailing dimension when converting to a wider type.
+    return jax.lax.bitcast_convert_type(u32_pairs, dt).reshape(shape)
+
+
+def encrypt_array(x: jax.Array, key_words, nonce_words, counter0) -> jax.Array:
+    """XOR `x` with the ChaCha20 keystream; returns array of same shape/dtype.
+
+    jit-safe. `counter0` may be a traced scalar (freshness counters).
+    """
+    shape, dtype = x.shape, x.dtype
+    words, pad = _to_words(x)
+    ks = chacha20_keystream_words(key_words, nonce_words, counter0, words.shape[0])
+    return _from_words(words ^ ks, shape, dtype, pad)
+
+
+decrypt_array = encrypt_array  # CTR: same operation
+
+
+def encrypt_tree(tree: Any, key_words, nonce_words, counter0=0):
+    """Encrypt every leaf with disjoint counter ranges. Returns (tree, n_blocks).
+
+    The same call decrypts (XOR). Counter ranges are assigned in pytree order,
+    so both sides derive identical layouts from the structure alone.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    ctr = counter0
+    for leaf in leaves:
+        leaf = jnp.asarray(leaf)
+        out.append(encrypt_array(leaf, key_words, nonce_words, ctr))
+        ctr = ctr + (-(-words_for(leaf.shape, leaf.dtype) // 16))
+    return jax.tree.unflatten(treedef, out), ctr
+
+
+decrypt_tree = encrypt_tree
+
+
+def tree_counter_blocks(tree: Any) -> int:
+    """Total counter blocks a pytree consumes (for counter-space bookkeeping)."""
+    leaves = jax.tree.leaves(tree)
+    return sum(-(-words_for(np.shape(l), np.result_type(l)) // 16) for l in leaves)

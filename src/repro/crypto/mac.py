@@ -1,0 +1,129 @@
+"""Keyed polynomial universal MAC over u32 lanes (Carter–Wegman style).
+
+The paper's enclave paging verifies integrity + freshness of every fetched
+page. Poly1305's 130-bit field does not map onto TPU integer units, so we use
+an encrypt-then-MAC construction with a polynomial hash over GF(p), p = 2^31-1
+(Mersenne), evaluated in pure u32 arithmetic (no x64 requirement): four
+independent (r, s) pairs drawn from the ChaCha20 keystream give a 4×31-bit
+tag. Structurally faithful (one-time authenticator keyed per message +
+freshness counter in the associated data); documented in DESIGN.md as a
+performance-shape stand-in, not a vetted primitive.
+
+tag_j = ( sum_i m_i * r_j^(n-i) + s_j ) mod p          (Horner form)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+P31 = (1 << 31) - 1
+_MASK31 = jnp.uint32(P31)
+
+
+def _mod31(x):
+    """Reduce u32 (< 2^32) mod 2^31-1. Result < 2^31-1."""
+    y = (x & _MASK31) + (x >> 31)
+    return jnp.where(y >= _MASK31, y - _MASK31, y)
+
+
+def _mulmod31(a, b):
+    """(a*b) mod 2^31-1 with all intermediates in u32.
+
+    a, b < 2^31. Split into 16-bit halves:
+      a*b = a1*b1*2^32 + (a1*b0 + a0*b1)*2^16 + a0*b0
+    2^31 ≡ 1 (mod p)  =>  2^32 ≡ 2,  x*2^16 handled by shift-reduction.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    a0 = a & jnp.uint32(0xFFFF)
+    a1 = a >> 16
+    b0 = b & jnp.uint32(0xFFFF)
+    b1 = b >> 16
+
+    t3 = _mod31(a0 * b0)                      # a0*b0 < 2^32
+    t2 = _mod31(_mod31(a1 * b0) + _mod31(a0 * b1))
+    t1 = _mod31(a1 * b1)                      # < 2^30
+
+    # t1 * 2^32 ≡ t1 * 2
+    c1 = _mod31(t1 + t1)
+    # t2 * 2^16: (x << 16) mod p = ((x << 16) & mask) + (x >> 15)
+    c2 = _mod31(((t2 << 16) & _MASK31) + (t2 >> 15))
+    return _mod31(_mod31(c1 + c2) + t3)
+
+
+def mac_tag_words(words: jax.Array, rs: jax.Array, ss: jax.Array) -> jax.Array:
+    """Tag a (n,) u32 message with 4 lanes. rs, ss: (4,) u32 (< p, from keystream).
+
+    jit-safe (runs "inside the enclave"). Returns (4,) u32 tag.
+    """
+    words = words.reshape(-1).astype(jnp.uint32)
+    # message words reduced into the field; prepend length word to prevent
+    # extension across sizes.
+    n = jnp.uint32(words.shape[0])
+    msg = jnp.concatenate([jnp.array([n], jnp.uint32), words])
+    msg = _mod31(msg)
+
+    def horner(h, m):
+        # h: (4,), m scalar broadcast over lanes
+        h = _mulmod31(h, rs)
+        h = _mod31(h + m)
+        return h, None
+
+    h0 = jnp.zeros((4,), jnp.uint32)
+    h, _ = jax.lax.scan(lambda h, m: horner(h, m), h0, msg)
+    return _mod31(h + _mod31(ss))
+
+
+# ---------------------------------------------------------------------------
+# numpy host path — identical tags (cross-checked in tests)
+# ---------------------------------------------------------------------------
+
+
+def mac_tag_host(words: np.ndarray, rs: np.ndarray, ss: np.ndarray) -> np.ndarray:
+    """Block-vectorized Horner (identical tags to the word-at-a-time form:
+    leading zero words contribute nothing to the polynomial)."""
+    words = np.asarray(words, dtype=np.uint64).reshape(-1)
+    rs = np.asarray(rs, dtype=np.uint64) % np.uint64(P31)
+    ss = np.asarray(ss, dtype=np.uint64)
+    p = np.uint64(P31)
+    msg = np.concatenate([np.array([len(words)], np.uint64), words]) % p
+
+    blk = 64
+    pad = (-len(msg)) % blk
+    if pad:
+        msg = np.concatenate([np.zeros(pad, np.uint64), msg])
+    msg = msg.reshape(-1, blk)  # (n_blocks, blk)
+
+    # rp[l, j] = rs[l]^(blk-1-j) mod p ;  r_blk = rs^blk mod p
+    rp = np.empty((4, blk), np.uint64)
+    rp[:, blk - 1] = 1
+    for j in range(blk - 2, -1, -1):
+        rp[:, j] = (rp[:, j + 1] * rs) % p
+    r_blk = (rp[:, 0] * rs) % p
+
+    h = np.zeros(4, np.uint64)
+    for row in msg:
+        acc = ((row[None, :] * rp) % p).sum(axis=1) % p  # < 2^31·blk, fits u64
+        h = (h * r_blk + acc) % p
+    return ((h + ss % p) % p).astype(np.uint32)
+
+
+def mac_verify_host(words: np.ndarray, rs, ss, tag) -> bool:
+    return bool(np.all(mac_tag_host(words, rs, ss) == np.asarray(tag, np.uint32)))
+
+
+def mac_keys_from_keystream(key_words, nonce_words, counter0):
+    """Derive (rs, ss) from one keystream block (host-side numpy)."""
+    from repro.crypto.chacha import _chacha20_blocks_np  # local import, host path
+
+    blk = _chacha20_blocks_np(
+        np.asarray(key_words, np.uint32),
+        np.array([counter0], np.uint32),
+        np.asarray(nonce_words, np.uint32),
+    )[0]
+    rs = blk[:4] % np.uint32(P31)
+    ss = blk[4:8] % np.uint32(P31)
+    return rs, ss

@@ -1,0 +1,4 @@
+from repro.data.pipeline import SecureShardedSource
+from repro.data.synthetic import synthetic_tokens
+
+__all__ = ["SecureShardedSource", "synthetic_tokens"]

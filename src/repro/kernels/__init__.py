@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+  chacha20/  CTR keystream generation + XOR — the boundary-crossing tax the
+             paper pays on every enclave exit (AES-NI there, VPU ARX here).
+  kmeans/    fused assign+accumulate for the paper's evaluation workload
+             (map step: n×k distances on the MXU, argmin, per-center sums).
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with interpret-mode switch), ref.py (pure-jnp oracle). Tests sweep
+shapes/dtypes and assert_allclose against ref.
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.chacha20.ops import chacha20_xor_words, ctr_crypt_array
+
+__all__ = ["chacha20_xor_words", "ctr_crypt_array"]

@@ -1,0 +1,70 @@
+"""jit'd wrappers for the chacha20 kernel: padding, word packing, dispatch.
+
+`impl` selects: 'pallas' (interpret on CPU, compiled on TPU), 'jnp' (oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import ctr as _ctr
+from repro.crypto.chacha import CONSTANT_WORDS
+from repro.kernels.chacha20 import ref as _ref
+from repro.kernels.chacha20.kernel import DEFAULT_BLOCK_ROWS, chacha20_xor_blocks
+
+
+def make_state0(key_words, nonce_words, counter0) -> jax.Array:
+    """Build the 16-word template state: constants | key | counter | nonce."""
+    const = jnp.array(CONSTANT_WORDS, dtype=jnp.uint32)
+    kw = jnp.asarray(key_words, jnp.uint32)
+    nw = jnp.asarray(nonce_words, jnp.uint32)
+    c = jnp.asarray(counter0, jnp.uint32).reshape(1)
+    return jnp.concatenate([const, kw, c, nw])
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_rows", "interpret"))
+def chacha20_xor_words(
+    words: jax.Array,
+    state0: jax.Array,
+    *,
+    impl: str = "pallas",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """XOR a flat (n,) u32 word stream with the keystream starting at state0."""
+    n = words.shape[0]
+    n_blocks = -(-n // 16)
+    if impl == "jnp" or n_blocks == 0:
+        from repro.crypto.chacha import chacha20_keystream_words
+
+        ks = chacha20_keystream_words(state0[4:12], state0[13:16], state0[12], n)
+        return words ^ ks
+    rows = block_rows
+    if n_blocks < rows:
+        # Small payloads: shrink tile to the padded block count (≥ 8 rows).
+        rows = max(8, 1 << (n_blocks - 1).bit_length())
+    pad_blocks = (-n_blocks) % rows
+    total = (n_blocks + pad_blocks) * 16
+    x = jnp.concatenate([words, jnp.zeros((total - n,), jnp.uint32)]).reshape(-1, 16)
+    y = chacha20_xor_blocks(x, state0, block_rows=rows, interpret=interpret)
+    return y.reshape(-1)[:n]
+
+
+def ctr_crypt_array(
+    x: jax.Array,
+    key_words,
+    nonce_words,
+    counter0=0,
+    *,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jax.Array:
+    """Encrypt/decrypt an arbitrary-dtype array via the kernel (XOR stream)."""
+    shape, dtype = x.shape, x.dtype
+    words, pad = _ctr._to_words(x)
+    state0 = make_state0(key_words, nonce_words, counter0)
+    out = chacha20_xor_words(words, state0, impl=impl, interpret=interpret)
+    return _ctr._from_words(out, shape, dtype, pad)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the chacha20 Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto.chacha import chacha20_block_words
+
+
+def chacha20_xor_blocks_ref(x_blocks: jax.Array, state0: jax.Array) -> jax.Array:
+    """Reference: XOR (n_blocks, 16) u32 message with keystream from state0."""
+    n = x_blocks.shape[0]
+    key_words = state0[4:12]
+    nonce_words = state0[13:16]
+    counters = state0[12] + jnp.arange(n, dtype=jnp.uint32)
+    ks = chacha20_block_words(key_words, counters, nonce_words)
+    return x_blocks ^ ks

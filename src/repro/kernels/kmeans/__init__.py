@@ -1,0 +1,3 @@
+from repro.kernels.kmeans.ops import kmeans_assign
+
+__all__ = ["kmeans_assign"]

@@ -1,0 +1,226 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:  jit(entry).lower(**input_specs) -> compile ->
+memory_analysis + cost_analysis + collective-bytes parse (tools/hlo.py).
+Results cached incrementally in reports/dryrun.json so reruns only do
+missing cells.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod  # 2x16x16
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_shape, shape_skips
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.tools.hlo import collective_bytes, roofline_terms
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "dryrun.json")
+
+
+def pick_accum(cfg, shape, mesh) -> int:
+    """Gradient-accumulation factor: keep tokens/chip/microbatch ~<=8k, with
+    an extra factor for >80B-param archs; bounded by batch/dp divisibility."""
+    from repro.tools.roofline import param_counts
+
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    max_accum = max(1, shape.global_batch // dp)
+    total, _ = param_counts(cfg)
+    want = 16 if total > 80e9 else 8
+    return min(want, max_accum)
+
+
+def entry_fn(cfg, shape, mesh, accum_steps: int = 8):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.serve.engine import cache_specs
+
+    def dp(b):
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+        if axes:
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if b % n != 0:
+                return None
+        return axes
+
+    if shape.kind == "train":
+        from repro.train.step import make_train_step
+
+        sec_moe = None
+        if cfg.secure_moe and cfg.family == "moe":
+            from repro.core.shuffle import SecureShuffleConfig
+            from repro.crypto import chacha
+
+            sec_moe = SecureShuffleConfig(
+                key_words=chacha.key_to_words(b"\x42" * 32),
+                nonce_words=chacha.nonce_to_words(b"\x0a" * 12),
+            )
+        step, _, _ = make_train_step(
+            cfg, mesh, donate=True, accum_steps=pick_accum(cfg, shape, mesh),
+            secure_moe=sec_moe,
+        )
+        return step, ("params", "opt_state", "batch", "step")
+
+    c_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cache_specs(cfg, mesh, batch=shape.global_batch)
+    )
+    if shape.kind == "prefill":
+        from repro.serve.engine import prefill
+
+        def pf(params, tokens, cache, frames=None):
+            return prefill(cfg, params, tokens, cache, mesh=mesh, frames=frames)
+
+        logits_sh = NamedSharding(mesh, P(dp(shape.global_batch), "model"))
+        return (
+            jax.jit(pf, donate_argnums=(2,), out_shardings=(logits_sh, c_sh)),
+            ("params", "tokens", "cache") + (("frames",) if cfg.family == "audio" else ()),
+        )
+    from repro.serve.engine import decode_step
+
+    def dec(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, mesh=mesh)
+
+    logits_sh = NamedSharding(mesh, P(dp(shape.global_batch), "model"))
+    return (
+        jax.jit(dec, donate_argnums=(1,), out_shardings=(logits_sh, c_sh)),
+        ("params", "cache", "tokens"),
+    )
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, save_hlo: str | None = None,
+             cfg_override: dict | None = None):
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = get_shape(shape_name)
+    skips = shape_skips(cfg)
+    if shape_name in skips:
+        return {"status": "SKIP", "reason": skips[shape_name]}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+    t0 = time.time()
+    fn, arg_order = entry_fn(cfg, shape, mesh)
+    spec = input_specs(cfg, shape, mesh)
+    args = [spec[k] for k in arg_order if k in spec]
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+        mem_d["peak_per_device"] = (
+            mem_d["argument_bytes"] + mem_d["output_bytes"] + mem_d["temp_bytes"]
+            - mem_d["alias_bytes"]
+        )
+    except Exception as e:  # CPU backend caveats
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_chips = mesh.devices.size
+    terms = roofline_terms(cost, coll, n_chips)
+
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    return {
+        "status": "OK",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "memory": mem_d,
+        "collectives": coll,
+        "roofline": terms,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single_pod", "multi_pod"])
+    ap.add_argument("--report", default=REPORT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.report)), exist_ok=True)
+    results = {}
+    if os.path.exists(args.report):
+        with open(args.report) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single_pod", "multi_pod"]
+
+    n_fail = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if key in results and results[key].get("status") in ("OK", "SKIP") and not args.force:
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    r = run_cell(arch, shape_name, mesh_name, save_hlo=args.save_hlo)
+                except Exception as e:
+                    r = {"status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                results[key] = r
+                with open(args.report, "w") as f:
+                    json.dump(results, f, indent=1)
+                msg = r["status"]
+                if r["status"] == "OK":
+                    msg += (f"  lower={r['t_lower_s']}s compile={r['t_compile_s']}s "
+                            f"dom={r['roofline'].get('dominant')}")
+                elif r["status"] == "FAIL":
+                    msg += "  " + r["error"][:200]
+                print(f"         {key}: {msg}", flush=True)
+    print(f"done; {n_fail} failures; report at {args.report}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,112 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Three cells (chosen per EXPERIMENTS.md §Perf):
+  A  rwkv6-1.6b|train_4k        worst non-decode roofline fraction (memory)
+  B  qwen2-moe-a2.7b|decode_32k most collective-bound dominant-term cell
+  C  granite-moe-3b-a800m|train_4k  the paper's technique (secure shuffle)
+
+Each variant is a config override; results append to reports/perf.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C] [--mesh single_pod]
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+CELLS = {
+    "A": {
+        "arch": "rwkv6-1.6b",
+        "shape": "train_4k",
+        "variants": [
+            ("v0_scan_wkv_paper_faithful", {"wkv_impl": "scan"}),
+            ("v1_blocked_wkv", {"wkv_impl": "blocked"}),
+            ("v2_blocked_no_remat", {"wkv_impl": "blocked", "remat": "none"}),
+            ("v3_blocked_remat_dots", {"wkv_impl": "blocked", "remat": "dots"}),
+        ],
+    },
+    "B": {
+        "arch": "qwen2-moe-a2.7b",
+        "shape": "decode_32k",
+        "variants": [
+            ("v0_tp_baseline", {}),
+            ("v1_ep_only", {"shard_strategy": "ep_only"}),
+            ("v2_ep_only_bf16_scores", {"shard_strategy": "ep_only",
+                                        "softmax_dtype": "bfloat16"}),
+            ("v3_bf16_serve_params", {"serve_bf16_params": True}),
+        ],
+    },
+    "C": {
+        "arch": "granite-moe-3b-a800m",
+        "shape": "train_4k",
+        "variants": [
+            ("v0_secure_shuffle_paper_faithful", {"secure_moe": True}),
+            ("v1_secure_save_shuffle_remat", {"secure_moe": True,
+                                              "moe_remat": "save_shuffle"}),
+            ("v2_secure_saveshuf_bf16_scores", {"secure_moe": True,
+                                                "moe_remat": "save_shuffle",
+                                                "softmax_dtype": "bfloat16"}),
+            ("v3_plain_saveshuf_bf16", {"secure_moe": False,
+                                        "moe_remat": "save_shuffle",
+                                        "softmax_dtype": "bfloat16"}),
+            ("v4_secure_saveshuf_no_expert_fsdp", {"secure_moe": True,
+                                                   "moe_remat": "save_shuffle",
+                                                   "moe_fsdp": False}),
+        ],
+    },
+}
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "perf.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C"])
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(REPORT):
+        with open(REPORT) as f:
+            results = json.load(f)
+
+    for cell_id, cell in CELLS.items():
+        if args.cell and cell_id != args.cell:
+            continue
+        for vname, override in cell["variants"]:
+            key = f"{cell_id}|{cell['arch']}|{cell['shape']}|{args.mesh}|{vname}"
+            if key in results and not args.force:
+                print(f"[cached] {key}")
+                continue
+            print(f"[run] {key}", flush=True)
+            try:
+                r = run_cell(cell["arch"], cell["shape"], args.mesh, cfg_override=override)
+                r["variant"] = vname
+                r["override"] = override
+            except Exception as e:
+                import traceback
+
+                r = {"status": "FAIL", "error": str(e),
+                     "trace": traceback.format_exc()[-1500:]}
+            results[key] = r
+            with open(REPORT, "w") as f:
+                json.dump(results, f, indent=1)
+            if r["status"] == "OK":
+                rf = r["roofline"]
+                print(f"   c={rf['compute_s']:.3e} m={rf['memory_s']:.3e} "
+                      f"x={rf['collective_s']:.3e} dom={rf['dominant']} "
+                      f"peak={r['memory'].get('peak_per_device', 0)/2**30:.2f}GiB")
+            else:
+                print(f"   FAIL {r['error'][:160]}")
+
+
+if __name__ == "__main__":
+    main()

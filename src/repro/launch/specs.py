@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+No device allocation: params/opt-state/batch/cache are all abstract, with
+NamedShardings attached so `.lower()` sees the production placement.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.lm import init_params, param_axes
+from repro.optim.adamw import adamw_init
+from repro.parallel.sharding import logical_to_spec, rules_for_mesh
+from repro.serve.engine import cache_specs, init_cache
+
+
+def _sharded_sds(tree, spec_tree, mesh):
+    def mk(x, spec):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(mk, tree, spec_tree)
+
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh):
+    n_model = mesh.shape.get("model", 1)
+    shapes = jax.eval_shape(partial(init_params, cfg, n_model=n_model), jax.random.key(0))
+    specs = logical_to_spec(param_axes(cfg), rules_for_mesh(mesh, cfg))
+    return _sharded_sds(shapes, specs, mesh)
+
+
+def abstract_opt_state(cfg: ArchConfig, mesh: Mesh, params_sds):
+    shapes = jax.eval_shape(adamw_init, params_sds)
+    p_specs = logical_to_spec(param_axes(cfg), rules_for_mesh(mesh, cfg))
+    specs = {"mu": p_specs, "nu": p_specs, "count": P()}
+    return _sharded_sds(shapes, specs, mesh)
+
+
+def _dp(mesh, batch: int | None = None):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if batch is not None and dp is not None:
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if batch % dp_size != 0:
+            return None  # e.g. long-context batch=1: replicate
+    return dp
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """Abstract inputs for the cell's entry point.
+
+    train  -> (params, opt_state, batch, step)
+    prefill-> (params, tokens, cache)
+    decode -> (params, cache, tokens)
+    """
+    b = shape.global_batch
+    dp = _dp(mesh, b)
+    params = abstract_params(cfg, mesh)
+
+    def tok_sds(t):
+        return jax.ShapeDtypeStruct((b, t), jnp.int32, sharding=NamedSharding(mesh, P(dp, None)))
+
+    if shape.kind == "train":
+        opt = abstract_opt_state(cfg, mesh, params)
+        batch = {"tokens": tok_sds(shape.seq_len)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32,
+                sharding=NamedSharding(mesh, P(dp, None, None)),
+            )
+        step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+        return {"params": params, "opt_state": opt, "batch": batch, "step": step}
+
+    if cfg.serve_bf16_params:
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape,
+                jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype,
+                sharding=s.sharding,
+            ),
+            params,
+        )
+
+    cache_shapes = jax.eval_shape(
+        partial(init_cache, cfg, b, shape.seq_len, mesh=None)
+    )
+    c_specs = cache_specs(cfg, mesh, batch=b)
+    cache = _sharded_sds(cache_shapes, c_specs, mesh)
+
+    if shape.kind == "prefill":
+        spec = {"params": params, "tokens": tok_sds(shape.seq_len), "cache": cache}
+        if cfg.family == "audio":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32,
+                sharding=NamedSharding(mesh, P(dp, None, None)),
+            )
+        return spec
+
+    # decode: one new token against a full-length cache
+    return {"params": params, "cache": cache, "tokens": tok_sds(1)}

@@ -1,0 +1,16 @@
+"""Model zoo: the 10 assigned architectures as one composable LM stack.
+
+Families: dense GQA decoders (mistral-large/deepseek/glm4/granite-20b,
+chameleon-vlm), MoE decoders with secure-shuffle expert dispatch
+(granite-moe, qwen2-moe), encoder-decoder (whisper), hybrid Mamba2+shared-attn
+(zamba2), attention-free RWKV6 (rwkv6).
+
+Everything is functional: `init_params(cfg, key)` -> pytree,
+`param_axes(cfg)` -> logical-axes pytree (same structure), and pure apply
+functions. Layer stacks are `lax.scan`-over-layers so HLO size is O(1) in
+depth (512-way SPMD compiles stay tractable).
+"""
+
+from repro.models.lm import init_params, param_axes, loss_fn, forward
+
+__all__ = ["init_params", "param_axes", "loss_fn", "forward"]

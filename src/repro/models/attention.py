@@ -1,0 +1,160 @@
+"""GQA/MQA attention: dense, query-chunked (memory-safe long-context), decode.
+
+Layouts: q (B, T, H, Dh); k/v (B, S, Hkv, Dh); GQA groups G = H // Hkv.
+The query-chunked path (`chunk > 0`) scans query blocks against the full
+K/V — score working set is O(C·S) instead of O(T·S), which is what lets
+prefill_32k lower within a v5e's HBM. Decode (T=1) always takes the dense
+path (scores are O(S)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _key, ninit, rmsnorm, rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ninit(_key(key, "wq"), (d, h * dh)),
+        "wk": ninit(_key(key, "wk"), (d, hkv * dh)),
+        "wv": ninit(_key(key, "wv"), (d, hkv * dh)),
+        "wo": ninit(_key(key, "wo"), (h * dh, d), fan_in=h * dh),
+    }
+    if cfg.qk_norm:
+        p["qn"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["kn"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def attn_axes(cfg):
+    a = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if cfg.qk_norm:
+        a["qn"] = {"scale": (None,)}
+        a["kn"] = {"scale": (None,)}
+    return a
+
+
+def project_q(cfg, params, x, positions, apply_rope=True):
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dh->bth", x, params["wq"].astype(x.dtype))
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qn"], q)
+    if apply_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(cfg, params, x, positions, apply_rope=True):
+    b, s, _ = x.shape
+    k = jnp.einsum("btd,dh->bth", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", x, params["wv"].astype(x.dtype))
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rmsnorm(params["kn"], k)
+    if apply_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _attend_dense(cfg, q, k, v, q_pos, k_pos, k_valid, causal):
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, dh)
+    sdt = jnp.bfloat16 if cfg.softmax_dtype == "bfloat16" else jnp.float32
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(sdt)
+    scores = scores / (dh**0.5)
+    mask = jnp.ones((b, 1, 1, t, s), bool)
+    if causal:
+        mask &= (k_pos[:, None, :] <= q_pos[:, :, None])[:, None, None, :, :]
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, jnp.asarray(NEG_INF, sdt))
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return ctx.reshape(b, t, h, dh)
+
+
+def _attend_chunked(cfg, q, k, v, q_pos, k_pos, k_valid, causal, chunk):
+    b, t, h, dh = q.shape
+    if t % chunk != 0 or t <= chunk:
+        return _attend_dense(cfg, q, k, v, q_pos, k_pos, k_valid, causal)
+    nc = t // chunk
+    qc = q.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)  # (nc, B, C, H, Dh)
+    pc = q_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def one(args):
+        qi, pi = args
+        return _attend_dense(cfg, qi, k, v, pi, k_pos, k_valid, causal)
+
+    ctx = lax.map(one, (qc, pc))  # (nc, B, C, H, Dh), O(C*S) live scores
+    return ctx.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dh)
+
+
+def attend(cfg, q, k, v, q_pos, k_pos, k_valid=None, causal=True):
+    if cfg.attn_chunk and q.shape[1] > cfg.attn_chunk:
+        return _attend_chunked(cfg, q, k, v, q_pos, k_pos, k_valid, causal, cfg.attn_chunk)
+    return _attend_dense(cfg, q, k, v, q_pos, k_pos, k_valid, causal)
+
+
+def out_proj(cfg, params, ctx):
+    b, t = ctx.shape[:2]
+    return jnp.einsum("bth,hd->btd", ctx.reshape(b, t, -1), params["wo"].astype(ctx.dtype))
+
+
+def self_attention(cfg, params, x, positions, k_valid=None, causal=None):
+    """Full self-attention over x (training / prefill)."""
+    causal = cfg.causal if causal is None else causal
+    q = project_q(cfg, params, x, positions)
+    k, v = project_kv(cfg, params, x, positions)
+    ctx = attend(cfg, q, k, v, positions, positions, k_valid, causal)
+    return out_proj(cfg, params, ctx)
+
+
+def cross_attention(cfg, params, x, enc_kv, positions, enc_valid=None):
+    """Decoder->encoder attention; enc_kv = (k, v) projected encoder states."""
+    q = project_q(cfg, params, x, positions, apply_rope=False)
+    k, v = enc_kv
+    s = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (x.shape[0], s))
+    ctx = attend(cfg, q, k, v, positions, k_pos, enc_valid, causal=False)
+    return out_proj(cfg, params, ctx)
+
+
+def decode_self_attention(cfg, params, x, cache_k, cache_v, position):
+    """One-token decode: x (B, 1, d); cache (B, S, Hkv, Dh); position (B,).
+
+    Returns (out, new_k, new_v): caller writes new_k/new_v into the cache at
+    `position` (functional update lives in serve/engine.py).
+    """
+    b = x.shape[0]
+    pos = position[:, None]  # (B, 1)
+    q = project_q(cfg, params, x, pos)
+    k_new, v_new = project_kv(cfg, params, x, pos)
+    s = cache_k.shape[1]
+    idx = jnp.arange(s, dtype=jnp.int32)[None]  # (1, S)
+
+    # in-place cache write (donation-aliasable, unlike a full-cache select)
+    def upd(c, n, p):
+        return lax.dynamic_update_slice(c, n, (p, jnp.int32(0), jnp.int32(0)))
+
+    k = jax.vmap(upd)(cache_k, k_new.astype(cache_k.dtype), position)
+    v = jax.vmap(upd)(cache_v, v_new.astype(cache_v.dtype), position)
+    k_pos = jnp.broadcast_to(idx, (b, s))
+    k_valid = idx <= pos
+    ctx = attend(cfg, q, k, v, pos, k_pos, k_valid, causal=False)
+    return out_proj(cfg, params, ctx), k, v

@@ -1,0 +1,129 @@
+"""Block composition per architecture family (pre-norm residual blocks)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import _key, apply_norm, mlp_apply, mlp_axes, mlp_init, norm_axes, norm_init
+
+
+def block_init(key, cfg, kind: str, n_model: int = 1):
+    d = cfg.d_model
+    if kind in ("attn", "enc"):
+        return {
+            "ln1": norm_init(key, d),
+            "attn": attn.attn_init(_key(key, "attn"), cfg),
+            "ln2": norm_init(key, d),
+            "mlp": mlp_init(_key(key, "mlp"), d, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "ln1": norm_init(key, d),
+            "attn": attn.attn_init(_key(key, "attn"), cfg),
+            "ln2": norm_init(key, d),
+            "moe": moe_mod.moe_init(_key(key, "moe"), cfg, n_model),
+        }
+    if kind == "mamba":
+        return {"ln1": norm_init(key, d), "ssm": ssm_mod.ssm_init(_key(key, "ssm"), cfg)}
+    if kind == "rwkv":
+        return {
+            "ln1": norm_init(key, d),
+            "tmix": rwkv_mod.rwkv_init(_key(key, "tmix"), cfg),
+            "ln2": norm_init(key, d),
+        }
+    if kind == "dec_cross":
+        return {
+            "ln1": norm_init(key, d),
+            "attn": attn.attn_init(_key(key, "attn"), cfg),
+            "lnx": norm_init(key, d),
+            "xattn": attn.attn_init(_key(key, "xattn"), cfg, cross=True),
+            "ln2": norm_init(key, d),
+            "mlp": mlp_init(_key(key, "mlp"), d, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def block_axes(cfg, kind: str):
+    d = cfg.d_model
+    if kind in ("attn", "enc"):
+        return {"ln1": norm_axes(d), "attn": attn.attn_axes(cfg), "ln2": norm_axes(d),
+                "mlp": mlp_axes()}
+    if kind == "moe":
+        return {"ln1": norm_axes(d), "attn": attn.attn_axes(cfg), "ln2": norm_axes(d),
+                "moe": moe_mod.moe_axes(cfg)}
+    if kind == "mamba":
+        return {"ln1": norm_axes(d), "ssm": ssm_mod.ssm_axes(cfg)}
+    if kind == "rwkv":
+        return {"ln1": norm_axes(d), "tmix": rwkv_mod.rwkv_axes(cfg), "ln2": norm_axes(d)}
+    if kind == "dec_cross":
+        return {"ln1": norm_axes(d), "attn": attn.attn_axes(cfg), "lnx": norm_axes(d),
+                "xattn": attn.attn_axes(cfg), "ln2": norm_axes(d), "mlp": mlp_axes()}
+    raise ValueError(kind)
+
+
+def remat_wrap(cfg, fn, names=()):
+    """Remat policy. `names` whitelists checkpoint_name'd intermediates (e.g.
+    the MoE all_to_all results) so backward does NOT replay collectives."""
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if names:
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(*names)
+        )
+    return jax.checkpoint(fn)
+
+
+# --- training / prefill (no cache) apply --------------------------------------
+
+
+def apply_attn_block(cfg, p, x, positions, causal=None):
+    h = attn.self_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x), positions,
+                            causal=causal)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x
+
+
+def apply_moe_block(cfg, p, x, positions, mesh=None, dp_spec=("pod", "data"), secure=None):
+    h = attn.self_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x), positions)
+    x = x + h
+    y, aux, dropped = moe_mod.moe_apply(
+        cfg, p["moe"], apply_norm(cfg, p["ln2"], x), mesh=mesh, dp_spec=dp_spec,
+        secure=secure,
+    )
+    return x + y, aux, dropped
+
+
+def apply_mamba_block(cfg, p, x, h0=None, conv0=None):
+    y, (h_end, conv_end) = ssm_mod.ssm_apply(cfg, p["ssm"], apply_norm(cfg, p["ln1"], x),
+                                             h0, conv0)
+    return x + y, h_end, conv_end
+
+
+def apply_rwkv_block(cfg, p, x, states=None):
+    # p["tmix"] holds both time-mix and channel-mix (cm_*) parameters.
+    s = states or (None, None, None)  # (tmix shift, wkv, cmix shift)
+    y, (tshift, wkv) = rwkv_mod.rwkv_time_mix(cfg, p["tmix"], apply_norm(cfg, p["ln1"], x),
+                                              s[0], s[1])
+    x = x + y
+    y, cshift = rwkv_mod.rwkv_channel_mix(cfg, p["tmix"], apply_norm(cfg, p["ln2"], x), s[2])
+    return x + y, (tshift, wkv, cshift)
+
+
+def apply_dec_cross_block(cfg, p, x, positions, enc_kv, enc_valid=None):
+    h = attn.self_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x), positions)
+    x = x + h
+    h = attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["lnx"], x), enc_kv,
+                             positions, enc_valid)
+    x = x + h
+    x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x

@@ -1,0 +1,126 @@
+"""Shared layers: norms, MLPs, embeddings, RoPE, init helpers.
+
+Init convention: every module has `<mod>_init(key, cfg, ...) -> params` and
+`<mod>_axes(cfg, ...) -> axes` (identical structure; leaves are tuples of
+logical dim names consumed by repro.parallel.sharding).
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+
+def _key(key, name: str):
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def ninit(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / max(fan_in, 1)) ** 0.5
+
+
+def compute_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --- norms --------------------------------------------------------------------
+
+
+def norm_init(key, d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_axes(d):
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * params["scale"]).astype(dt)
+
+
+def apply_norm(cfg, params, x):
+    return rmsnorm(params, x) if cfg.norm == "rmsnorm" else layernorm(params, x)
+
+
+def act_fn(cfg):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[cfg.act]
+
+
+# --- gated MLP (SwiGLU family) --------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff):
+    return {
+        "wi": ninit(_key(key, "wi"), (d_model, d_ff)),
+        "wg": ninit(_key(key, "wg"), (d_model, d_ff)),
+        "wo": ninit(_key(key, "wo"), (d_ff, d_model)),
+    }
+
+
+def mlp_axes():
+    return {"wi": ("fsdp", "mlp"), "wg": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+
+
+def mlp_apply(cfg, params, x):
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, params["wi"].astype(dt))
+    g = jnp.einsum("btd,df->btf", x, params["wg"].astype(dt))
+    h = act_fn(cfg)(g) * h
+    return jnp.einsum("btf,fd->btd", h, params["wo"].astype(dt))
+
+
+# --- embeddings -----------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model):
+    return {"table": jax.random.normal(_key(key, "emb"), (vocab, d_model)) * 0.02}
+
+
+def embed_axes():
+    return {"table": ("vocab", "embed")}
+
+
+def embed_apply(cfg, params, tokens):
+    # gather; vocab is 'model'-sharded -> XLA turns this into a sharded
+    # one-hot matmul / all-reduce under SPMD
+    return params["table"].astype(compute_dtype(cfg))[tokens]
+
+
+def unembed_apply(cfg, params, x):
+    logits = jnp.einsum("btd,vd->btv", x, params["table"].astype(x.dtype))
+    vpad = params["table"].shape[0]
+    if vpad > cfg.vocab_size:
+        # mask padding rows (never predicted, zero softmax mass)
+        live = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vpad), 2) < cfg.vocab_size
+        logits = jnp.where(live, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# --- RoPE ------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (B, T, H, Dh); positions: (B, T) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

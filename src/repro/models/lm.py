@@ -1,0 +1,328 @@
+"""LM assembly: init/axes/forward/loss for every assigned architecture family.
+
+Layer stacks are `lax.scan` over stacked per-layer params (HLO is O(1) in
+depth). Families:
+  dense | vlm       scan of attn blocks
+  moe               scan of attn+MoE blocks (secure-shuffle dispatch inside)
+  ssm (rwkv6)       scan of rwkv blocks
+  hybrid (zamba2)   scan of mamba blocks with a weight-SHARED attention block
+                    injected every `attn_every` layers via lax.cond
+  audio (whisper)   encoder scan + decoder scan with cross-attention; the
+                    conv/mel frontend is a stub: inputs are frame embeddings
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models.layers import (
+    _key,
+    apply_norm,
+    compute_dtype,
+    embed_apply,
+    embed_axes,
+    embed_init,
+    norm_axes,
+    norm_init,
+    unembed_apply,
+)
+
+
+def _stack_init(key, cfg, kind, n, n_model=1):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: B.block_init(k, cfg, kind, n_model))(keys)
+
+
+def _stack_axes(cfg, kind):
+    ax = B.block_axes(cfg, kind)
+    return jax.tree.map(
+        lambda a: ("layers",) + a,
+        ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def main_kind(cfg) -> str:
+    return {
+        "dense": "attn",
+        "vlm": "attn",
+        "moe": "moe",
+        "ssm": "rwkv",
+        "hybrid": "mamba",
+        "audio": "dec_cross",
+    }[cfg.family]
+
+
+def init_params(cfg, key, n_model: int = 1):
+    p = {"embed": embed_init(_key(key, "embed"), cfg.padded_vocab, cfg.d_model)}
+    if cfg.family == "audio":
+        p["encoder"] = _stack_init(_key(key, "enc"), cfg, "enc", cfg.n_encoder_layers)
+        p["enc_norm"] = norm_init(key, cfg.d_model)
+        p["decoder"] = _stack_init(_key(key, "dec"), cfg, "dec_cross", cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack_init(_key(key, "layers"), cfg, "mamba", cfg.n_layers)
+        p["shared_attn"] = B.block_init(_key(key, "shared"), cfg, "attn")
+    else:
+        p["layers"] = _stack_init(_key(key, "layers"), cfg, main_kind(cfg), cfg.n_layers,
+                                  n_model)
+    p["final_norm"] = norm_init(key, cfg.d_model)
+    return p
+
+
+def param_axes(cfg):
+    a = {"embed": embed_axes()}
+    if cfg.family == "audio":
+        a["encoder"] = _stack_axes(cfg, "enc")
+        a["enc_norm"] = norm_axes(cfg.d_model)
+        a["decoder"] = _stack_axes(cfg, "dec_cross")
+    elif cfg.family == "hybrid":
+        a["layers"] = _stack_axes(cfg, "mamba")
+        a["shared_attn"] = B.block_axes(cfg, "attn")
+    else:
+        a["layers"] = _stack_axes(cfg, main_kind(cfg))
+    a["final_norm"] = norm_axes(cfg.d_model)
+    return a
+
+
+# --- forward -------------------------------------------------------------------
+
+
+def _dp(mesh):
+    if mesh is None:
+        return None
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _seq_ax(cfg, mesh, t: int):
+    """'model' when context parallelism is on and the length divides."""
+    if (
+        mesh is not None
+        and getattr(cfg, "shard_strategy", "tp") == "dp_sp"
+        and "model" in mesh.axis_names
+        and t % mesh.shape["model"] == 0
+        and t >= mesh.shape["model"]
+    ):
+        return "model"
+    return None
+
+
+def constrain_act(cfg, mesh, h):
+    """(B, T, d) activation constraint under the arch's shard strategy."""
+    if mesh is None:
+        return h
+    return _constrain(h, mesh, P(_dp(mesh), _seq_ax(cfg, mesh, h.shape[1]), None))
+
+
+def _remat_groups(cfg, n_layers: int) -> int:
+    """Outer group count for two-level (sqrt-L) remat: the scan saves only
+    G ≈ sqrt(L) group-boundary activations; each group recomputes its layers
+    during backward. Returns 1 (plain per-layer remat) when not worthwhile."""
+    if cfg.remat != "sqrt" or n_layers < 12:
+        return 1
+    best, best_cost = 1, float("inf")
+    for g in range(2, n_layers + 1):
+        if n_layers % g:
+            continue
+        cost = g + n_layers // g  # boundaries + recompute span
+        if cost < best_cost:
+            best, best_cost = g, cost
+    return best
+
+
+def _scan_grouped(cfg, stack, x, layer_step, mesh, names=()):
+    """lax.scan over L layers with optional two-level remat.
+
+    layer_step(carry, p) -> carry  (carry may be a tuple; x is carry here)
+    `names` are checkpoint_name'd intermediates kept at BOTH remat levels
+    (collective outputs must not be replayed by backward).
+    """
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    groups = _remat_groups(cfg, n_layers)
+    body = B.remat_wrap(cfg, layer_step, names=names)
+
+    def inner(carry, p):
+        return body(carry, p), ()
+
+    if groups == 1:
+        out, _ = lax.scan(inner, x, stack)
+        return out
+
+    per = n_layers // groups
+    gstack = jax.tree.map(lambda a: a.reshape((groups, per) + a.shape[1:]), stack)
+
+    def group_fn(carry, gp):
+        out, _ = lax.scan(inner, carry, gp)
+        return out
+
+    if names:
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.save_only_these_names(*names)
+        )
+    else:
+        group_fn = jax.checkpoint(group_fn)
+
+    def group_step(carry, gp):
+        return group_fn(carry, gp), ()
+
+    out, _ = lax.scan(group_step, x, gstack)
+    return out
+
+
+def _scan_attn(cfg, stack, x, positions, mesh, causal=None):
+    def step(h, p):
+        h = B.apply_attn_block(cfg, p, h, positions, causal=causal)
+        return constrain_act(cfg, mesh, h)
+
+    return _scan_grouped(cfg, stack, x, step, mesh)
+
+
+def _scan_moe(cfg, stack, x, positions, mesh, secure=None):
+    dp = _dp(mesh) or ()
+
+    def step(carry, p):
+        h, aux, dropped = carry
+        h, a, d = B.apply_moe_block(cfg, p, h, positions, mesh=mesh, dp_spec=dp,
+                                    secure=secure)
+        h = constrain_act(cfg, mesh, h)
+        return (h, aux + a, dropped + d)
+
+    names = ("moe_recv", "moe_back") if cfg.moe_remat == "save_shuffle" else ()
+    x, aux, dropped = _scan_grouped(
+        cfg, stack, (x, jnp.float32(0.0), jnp.int32(0)), step, mesh, names=names
+    )
+    return x, aux, dropped
+
+
+def _scan_rwkv(cfg, stack, x, mesh):
+    def step(h, p):
+        h, _states = B.apply_rwkv_block(cfg, p, h)
+        return constrain_act(cfg, mesh, h)
+
+    return _scan_grouped(cfg, stack, x, step, mesh)
+
+
+def _scan_hybrid(cfg, params, x, positions, mesh):
+    """Mamba scan in groups of `attn_every`, the weight-SHARED attention block
+    applied between groups (grouped rather than lax.cond-in-scan: every op is
+    statically counted, and no branch executes wastefully)."""
+    shared = params["shared_attn"]
+    every = cfg.attn_every or (cfg.n_layers + 1)
+    n_groups = cfg.n_layers // every
+
+    mamba_body = B.remat_wrap(cfg, lambda p, h: B.apply_mamba_block(cfg, p, h)[0])
+
+    def scan_stack(h, stack):
+        def step(hh, p):
+            return constrain_act(cfg, mesh, mamba_body(p, hh)), ()
+
+        return lax.scan(step, h, stack)[0]
+
+    attn_body = B.remat_wrap(cfg, lambda h: B.apply_attn_block(cfg, shared, h, positions))
+
+    @jax.checkpoint
+    def group(h, sl):
+        h = scan_stack(h, sl)
+        return constrain_act(cfg, mesh, attn_body(h))
+
+    for g in range(n_groups):
+        sl = jax.tree.map(lambda a: a[g * every : (g + 1) * every], params["layers"])
+        x = group(x, sl)
+    if cfg.n_layers % every:
+        sl = jax.tree.map(lambda a: a[n_groups * every :], params["layers"])
+        x = scan_stack(x, sl)
+    return x
+
+
+def _scan_dec_cross(cfg, stack, x, positions, enc_kv_stack, mesh):
+    """Decoder scan; per-layer cross-attention K/V precomputed from encoder."""
+
+    def block(p, ekv, h):
+        return B.apply_dec_cross_block(cfg, p, h, positions, ekv)
+
+    body = B.remat_wrap(cfg, block)
+
+    def step(h, inp):
+        p, ekv = inp
+        h = constrain_act(cfg, mesh, body(p, ekv, h))
+        return h, ()
+
+    x, _ = lax.scan(step, x, (stack, enc_kv_stack))
+    return x
+
+
+def encode_audio(cfg, params, frames, mesh=None):
+    """frames: (B, S_enc, d_model) — precomputed frontend embeddings (stub).
+    Returns per-decoder-layer cross K/V stack."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = frames.astype(compute_dtype(cfg))
+    h = _scan_attn(cfg, params["encoder"], h, pos, mesh, causal=False)
+    h = apply_norm(cfg, params["enc_norm"], h)
+
+    def proj(p):
+        return attn.project_kv(cfg, p["xattn"], h, pos, apply_rope=False)
+
+    return jax.vmap(proj)(params["decoder"])  # (L, ...) k/v stacks
+
+
+def forward(cfg, params, batch, mesh=None, secure_moe=None):
+    """batch: {"tokens": (B,T) int32 [, "frames": (B,S,d) for audio]}.
+    Returns (logits (B,T,V), aux dict)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    dp = _dp(mesh)
+    x = constrain_act(cfg, mesh, embed_apply(cfg, params["embed"], tokens))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    aux = {"moe_aux": jnp.float32(0.0), "moe_dropped": jnp.int32(0)}
+
+    if cfg.family == "audio":
+        enc_kv = encode_audio(cfg, params, batch["frames"], mesh)
+        x = _scan_dec_cross(cfg, params["decoder"], x, positions, enc_kv, mesh)
+    elif cfg.family == "hybrid":
+        x = _scan_hybrid(cfg, params, x, positions, mesh)
+    elif cfg.family == "ssm":
+        x = _scan_rwkv(cfg, params["layers"], x, mesh)
+    elif cfg.family == "moe":
+        x, moe_aux, dropped = _scan_moe(cfg, params["layers"], x, positions, mesh,
+                                        secure=secure_moe)
+        aux = {"moe_aux": moe_aux / cfg.n_layers, "moe_dropped": dropped}
+    else:
+        x = _scan_attn(cfg, params["layers"], x, positions, mesh)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(cfg, params["embed"], x)
+    if mesh is not None and getattr(cfg, "shard_strategy", "tp") == "dp_sp":
+        logits = _constrain(logits, mesh, P(dp, _seq_ax(cfg, mesh, logits.shape[1]), None))
+    else:
+        model_ax = "model" if (mesh is not None and "model" in mesh.axis_names) else None
+        logits = _constrain(logits, mesh, P(dp, None, model_ax))
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch, mesh=None, secure_moe=None, aux_coef: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(cfg, params, batch, mesh, secure_moe)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    if mask.shape[1] == batch["tokens"].shape[1]:
+        mask = mask[:, 1:]
+    nll = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll + aux_coef * aux["moe_aux"]
+    metrics = {"nll": nll, **aux}
+    return loss, metrics

@@ -1,0 +1,240 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention, attention-free.
+
+Time-mix core (per head, state S: (Dk, Dv)):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t S_{t-1} + (r_t ⊙ u · k_t) v_t
+with w_t = exp(-exp(ww_t)) a *data-dependent* per-channel decay (the Finch
+contribution) produced by a low-rank MLP on the token-shift mix; u is the
+bonus for the current token. Channel-mix is the squared-ReLU variant.
+
+Training runs a `lax.scan` over time wrapped in per-chunk `jax.checkpoint`
+(sequential but numerically exact; the GLA-style parallel form needs
+exp(+cumsum) factors that overflow fp32 for strong decays — see DESIGN.md).
+Simplified vs upstream: static token-shift mix coefficients (no ddlerp LoRA
+on the mix), GroupNorm on y replaced by per-head RMS normalization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _key, ninit
+
+HEAD_K = 64  # per-head key/value channels
+DECAY_RANK = 32
+
+
+def rwkv_dims(cfg):
+    h = cfg.d_model // HEAD_K
+    return h, HEAD_K
+
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    h, dk = rwkv_dims(cfg)
+    return {
+        "mix": jax.random.uniform(_key(key, "mix"), (5, d)),  # r,k,v,w,g shift mixes
+        "wr": ninit(_key(key, "wr"), (d, d)),
+        "wk": ninit(_key(key, "wk"), (d, d)),
+        "wv": ninit(_key(key, "wv"), (d, d)),
+        "wg": ninit(_key(key, "wg"), (d, d)),
+        "wo": ninit(_key(key, "wo"), (d, d)),
+        "w0": jnp.full((d,), -1.0, jnp.float32),  # base decay logit
+        "w_lora_a": ninit(_key(key, "wla"), (d, DECAY_RANK)),
+        "w_lora_b": ninit(_key(key, "wlb"), (DECAY_RANK, d), fan_in=DECAY_RANK) * 0.1,
+        "u": jnp.zeros((h, dk), jnp.float32),  # current-token bonus
+        # channel mix
+        "cm_mix": jax.random.uniform(_key(key, "cmix"), (2, d)),
+        "cm_k": ninit(_key(key, "cmk"), (d, cfg.d_ff)),
+        "cm_v": ninit(_key(key, "cmv"), (cfg.d_ff, d), fan_in=cfg.d_ff),
+        "cm_r": ninit(_key(key, "cmr"), (d, d)),
+    }
+
+
+def rwkv_axes(cfg):
+    return {
+        "mix": (None, "embed"),
+        "wr": ("fsdp", "heads"),
+        "wk": ("fsdp", "heads"),
+        "wv": ("fsdp", "heads"),
+        "wg": ("fsdp", "heads"),
+        "wo": ("heads", "fsdp"),
+        "w0": ("embed",),
+        "w_lora_a": ("fsdp", None),
+        "w_lora_b": (None, "embed"),
+        "u": (None, None),  # (h, dk) is tiny; h may be 1 at smoke scale
+        "cm_mix": (None, "embed"),
+        "cm_k": ("fsdp", "mlp"),
+        "cm_v": ("mlp", "fsdp"),
+        "cm_r": ("fsdp", "embed"),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}, with `prev` (B,1,d) as the t=0 predecessor."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _head_norm(y, eps=1e-5):
+    return y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int):
+    """r,k,v: (B,T,H,Dk); w: (B,T,H,Dk) decay in (0,1); s0: (B,H,Dk,Dv).
+
+    Baseline (paper-faithful recurrence): one state update per token. Exact,
+    but state traffic is O(T·Dk·Dv) HBM bytes — the memory-roofline driver
+    identified in EXPERIMENTS.md §Perf.
+    """
+    b, t, h, dk = r.shape
+
+    def step(s, inp):
+        ri, ki, vi, wi = inp  # (B,H,Dk)
+        kv = jnp.einsum("bhk,bhv->bhkv", ki, vi)
+        y = jnp.einsum("bhk,bhkv->bhv", ri, s) + jnp.einsum(
+            "bhk,hk,bhkv->bhv", ri, u, kv
+        )
+        s_new = s * wi[..., None] + kv
+        return s_new, y
+
+    xs = jax.tree.map(
+        lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0), (r, k, v, w)
+    )
+    n = t
+    q = min(chunk, n)
+    while n % q != 0:
+        q //= 2
+
+    def chunk_body(s, inp_chunk):
+        return lax.scan(step, s, inp_chunk)
+
+    xs_c = jax.tree.map(lambda a: a.reshape((n // q, q) + a.shape[1:]), xs)
+    s_end, ys = lax.scan(jax.checkpoint(chunk_body), s0.astype(jnp.float32), xs_c)
+    y = jnp.moveaxis(ys.reshape((n,) + ys.shape[2:]), 0, 1)  # (B,T,H,Dv)
+    return y, s_end
+
+
+WKV_BLOCK = 16  # per-channel decay exponents bounded by BLOCK·|log w|_max < 88
+
+
+def _wkv_blocked(r, k, v, w, u, s0, block: int = WKV_BLOCK):
+    """Block-parallel WKV (GLA-style): one state update per BLOCK tokens.
+
+    Within a block (Λ = exclusive cumsum log w from block start; Lb = total):
+        y_i   = r̃_i·S + (r̃_i·k̂_j)_{j<i} v_j + ((r_i⊙u)·k_i) v_i
+        S'    = diag(e^{Lb}) S + k̃ᵀ v
+        r̃ = r⊙e^Λ (≤1),  k̂ = k⊙e^{-(Λ+log w)},  k̃ = k⊙e^{Lb-Λ-log w} (≤1)
+    The only growing exponent, -(Λ+log w) ≤ BLOCK·|log w|_max, stays under
+    fp32 overflow because `_decay` clamps per-step log-decay magnitude.
+    HBM: state read/write every `block` steps instead of every step, plus
+    O(block²) intra terms that live in registers/VMEM — memory roofline drops
+    ~block×; flops rise by the (tiny) block² term. Exactness vs the scan
+    baseline is tested to 1e-4.
+    """
+    b, t, h, dk = r.shape
+    nb = t // block
+    assert t % block == 0, (t, block)
+
+    f32 = jnp.float32
+    shp = (b, nb, block, h, dk)
+    rb, kb, vb, wb = (
+        a.astype(f32).reshape(shp) for a in (r, k, v, w)
+    )
+    logw = jnp.log(jnp.maximum(wb, 1e-38))  # (B,nb,S,H,C), <= 0
+    lam = jnp.cumsum(logw, axis=2) - logw  # exclusive cumsum Λ
+    lb_tot = lam[:, :, -1] + logw[:, :, -1]  # (B,nb,H,C)
+
+    r_t = rb * jnp.exp(lam)
+    k_hat = kb * jnp.exp(-(lam + logw))
+    k_tl = kb * jnp.exp(lb_tot[:, :, None] - lam - logw)
+
+    # intra-block causal pairs + current-token bonus
+    a_pairs = jnp.einsum("bnihc,bnjhc->bnhij", r_t, k_hat)
+    mask = jnp.tril(jnp.ones((block, block), bool), k=-1)
+    a_pairs = jnp.where(mask[None, None, None], a_pairs, 0.0)
+    a_bonus = jnp.einsum("bnihc,hc,bnihc->bnhi", rb, u.astype(f32), kb)
+    y_intra = jnp.einsum("bnhij,bnjhv->bnihv", a_pairs, vb)
+    y_intra = y_intra + a_bonus[..., None].transpose(0, 1, 3, 2, 4) * vb
+
+    def body(s, inp):
+        rt_n, ktl_n, v_n, lbt_n = inp  # (B,S,H,C), ..., (B,H,C)
+        y_inter = jnp.einsum("bihc,bhcv->bihv", rt_n, s)
+        s_new = s * jnp.exp(lbt_n)[..., None] + jnp.einsum("bjhc,bjhv->bhcv", ktl_n, v_n)
+        return s_new, y_inter
+
+    xs = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 1, 0), (r_t, k_tl, vb, lb_tot)
+    )
+    s_end, y_inter = lax.scan(body, s0.astype(f32), xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, t, h, dk), s_end
+
+
+def _decay(params, zw):
+    # log-decay magnitude clamped to exp(1.2)≈3.32/step: keeps the blocked
+    # WKV's largest exponent at BLOCK·3.32≈53 < fp32 overflow (88); a decay of
+    # e^-3.32 per step is already ≈0 over a block, so the cap is harmless.
+    ww = params["w0"] + jnp.tanh(
+        zw.astype(jnp.float32) @ params["w_lora_a"]
+    ) @ params["w_lora_b"]
+    return jnp.exp(-jnp.exp(jnp.clip(ww, -12.0, 1.2)))  # (…, d) in (0,1)
+
+
+def rwkv_time_mix(cfg, params, x, shift_state=None, wkv_state=None, chunk: int = 256,
+                  impl: str = "blocked"):
+    b, t, d = x.shape
+    h, dk = rwkv_dims(cfg)
+    prev = shift_state if shift_state is not None else jnp.zeros((b, 1, d), x.dtype)
+    xp = _shift(x, prev)
+    mix = params["mix"].astype(x.dtype)
+    zr, zk, zv, zw, zg = (x + (xp - x) * mix[i] for i in range(5))
+    r = (zr @ params["wr"].astype(x.dtype)).reshape(b, t, h, dk)
+    k = (zk @ params["wk"].astype(x.dtype)).reshape(b, t, h, dk)
+    v = (zv @ params["wv"].astype(x.dtype)).reshape(b, t, h, dk)
+    g = jax.nn.silu(zg @ params["wg"].astype(x.dtype))
+    w = _decay(params, zw).reshape(b, t, h, dk)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, dk, dk), jnp.float32)
+    impl = getattr(cfg, "wkv_impl", impl)
+    if impl == "blocked" and t % WKV_BLOCK == 0 and t >= WKV_BLOCK:
+        y, s_end = _wkv_blocked(r, k, v, w, params["u"], wkv_state)
+    else:
+        y, s_end = _wkv_scan(r, k, v, w, params["u"], wkv_state, chunk)
+    y = _head_norm(y).reshape(b, t, d).astype(x.dtype) * g
+    out = y @ params["wo"].astype(x.dtype)
+    return out, (x[:, -1:, :], s_end)
+
+
+def rwkv_channel_mix(cfg, params, x, shift_state=None):
+    b, t, d = x.shape
+    prev = shift_state if shift_state is not None else jnp.zeros((b, 1, d), x.dtype)
+    xp = _shift(x, prev)
+    mix = params["cm_mix"].astype(x.dtype)
+    zk = x + (xp - x) * mix[0]
+    zr = x + (xp - x) * mix[1]
+    kk = jnp.square(jax.nn.relu(zk @ params["cm_k"].astype(x.dtype)))
+    rr = jax.nn.sigmoid(zr @ params["cm_r"].astype(x.dtype))
+    return rr * (kk @ params["cm_v"].astype(x.dtype)), x[:, -1:, :]
+
+
+def rwkv_time_mix_step(cfg, params, x, shift_state, wkv_state):
+    """One-token decode. x (B,1,d); shift (B,1,d); wkv (B,H,Dk,Dv)."""
+    b, _, d = x.shape
+    h, dk = rwkv_dims(cfg)
+    xp = shift_state.astype(x.dtype)
+    mix = params["mix"].astype(x.dtype)
+    zr, zk, zv, zw, zg = (x + (xp - x) * mix[i] for i in range(5))
+    r = (zr @ params["wr"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32)
+    k = (zk @ params["wk"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32)
+    v = (zv @ params["wv"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32)
+    g = jax.nn.silu(zg @ params["wg"].astype(x.dtype))
+    w = _decay(params, zw).reshape(b, h, dk)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, wkv_state) + jnp.einsum(
+        "bhk,hk,bhkv->bhv", r, params["u"], kv
+    )
+    s_new = wkv_state * w[..., None] + kv
+    y = _head_norm(y).reshape(b, 1, d).astype(x.dtype) * g
+    return y @ params["wo"].astype(x.dtype), x, s_new

@@ -1,0 +1,171 @@
+"""Mamba2 / SSD block (zamba2's backbone), chunked-parallel form.
+
+Recurrence per head (state h: (N, P), scalar decay per head/step):
+    h_t = a_t h_{t-1} + dt_t · B_t ⊗ x_t          a_t = exp(-dt_t·exp(A_log))
+    y_t = C_t · h_t + D ⊙ x_t
+Chunked evaluation (Mamba-2 SSD): within a chunk of Q steps the causal decay
+matrix L_ij = exp(La_i − La_j) (i ≥ j, La = cumsum log a) is formed directly
+— differences are ≤ 0, so no overflow — giving an O(Q²) intra-chunk term plus
+an O(N·P) carried state between chunks. Backward memory is O(T/Q) states
+instead of O(T).
+
+Simplifications vs the full Mamba2 block (documented in DESIGN.md): the
+short causal conv is applied to x only (not B/C); single B/C group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _key, ninit
+
+HEAD_P = 64  # per-head channels (Mamba2 default headdim)
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    w = cfg.ssm_conv
+    return {
+        # projections: x, z (gate), B, C, dt
+        "in_proj": ninit(_key(key, "in"), (d, 2 * d_inner + 2 * n + h)),
+        "conv_w": jax.random.normal(_key(key, "conv"), (w, d_inner)) * 0.2,
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": ninit(_key(key, "out"), (d_inner, d), fan_in=d_inner),
+    }
+
+
+def ssm_axes(cfg):
+    return {
+        "in_proj": ("fsdp", "mlp"),
+        "conv_w": ("dconv", "mlp"),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "out_proj": ("mlp", "fsdp"),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    xz, rest = proj[..., : 2 * d_inner], proj[..., 2 * d_inner :]
+    x, z = xz[..., :d_inner], xz[..., d_inner:]
+    bm = rest[..., :n]
+    cm = rest[..., n : 2 * n]
+    dt = rest[..., 2 * n :]
+    return x, z, bm, cm, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv; x (B,T,D), w (W,D). state: (B,W-1,D) or None."""
+    wlen = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(wlen))
+    new_state = xp[:, -(wlen - 1) :] if wlen > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xh, dt, a_log, bm, cm, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,T,H,P)  dt: (B,T,H)  bm/cm: (B,T,N)  h0: (B,H,N,P)
+    Returns y (B,T,H,P), h_end (B,H,N,P).
+    """
+    b, t, h, p = xh.shape
+    n = bm.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+
+    loga = -dt * jnp.exp(a_log.astype(jnp.float32))[None, None, :]  # (B,T,H) <= 0
+    xs = (
+        xh.reshape(b, nc, q, h, p),
+        dt.reshape(b, nc, q, h),
+        loga.reshape(b, nc, q, h),
+        bm.reshape(b, nc, q, n),
+        cm.reshape(b, nc, q, n),
+    )
+    xs = jax.tree.map(lambda v: jnp.moveaxis(v, 1, 0), xs)  # lead chunk dim
+
+    def body(hc, inp):
+        xq, dtq, lq, bq, cq = inp  # (B,Q,...)
+        la = jnp.cumsum(lq, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: y_i += sum_{j<=i} exp(la_i - la_j) (C_i·B_j) dt_j x_j
+        decay = la[:, :, None, :] - la[:, None, :, :]  # (B,Q,Q,H) i,j
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        ldec = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        gate = cb[:, :, :, None] * ldec  # (B,Q,Q,H)
+        xdt = xq.astype(jnp.float32) * dtq[..., None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", gate, xdt)
+        # inter-chunk: y_i += exp(la_i) C_i · h_in
+        y_inter = jnp.einsum("bin,bhnp->bihp", cq.astype(jnp.float32), hc) * jnp.exp(
+            la
+        )[..., None]
+        # state: h_out = exp(la_Q) h_in + sum_j exp(la_Q - la_j) dt_j B_j (x) x_j
+        tail = jnp.exp(la[:, -1:, :] - la)  # (B,Q,H)
+        hb = jnp.einsum("bjn,bjhp->bhnp", bq.astype(jnp.float32), xdt * tail[..., None])
+        h_out = hc * jnp.exp(la[:, -1])[:, :, None, None] + hb
+        return h_out, (y_intra + y_inter).astype(xq.dtype)
+
+    h_end, ys = lax.scan(body, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+    return y, h_end
+
+
+def ssm_apply(cfg, params, x, h0=None, conv_state=None, chunk: int = 256):
+    """Full-sequence SSM block. Returns (y, (h_end, conv_end))."""
+    b, t, d = x.shape
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    proj = jnp.einsum("btd,dk->btk", x, params["in_proj"].astype(x.dtype))
+    xc, z, bm, cm, dt = _split_proj(cfg, proj)
+    xc, conv_end = _causal_conv(xc, params["conv_w"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    xh = xc.reshape(b, t, h, HEAD_P)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, HEAD_P), jnp.float32)
+    # pick a chunk that divides T
+    q = chunk
+    while t % q != 0:
+        q //= 2
+    y, h_end = ssd_chunked(xh, dt, params["a_log"], bm, cm, h0, q)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("btk,kd->btd", y, params["out_proj"].astype(x.dtype))
+    return out, (h_end, conv_end)
+
+
+def ssm_decode_step(cfg, params, x, h_state, conv_state):
+    """One-token step. x: (B,1,d); h_state (B,H,N,P); conv (B,W-1,d_inner)."""
+    b, _, d = x.shape
+    d_inner, h = ssm_dims(cfg)
+    proj = jnp.einsum("btd,dk->btk", x, params["in_proj"].astype(x.dtype))
+    xc, z, bm, cm, dt = _split_proj(cfg, proj)
+    xc, conv_new = _causal_conv(xc, params["conv_w"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    xh = xc.reshape(b, h, HEAD_P).astype(jnp.float32)
+    a = jnp.exp(-dt * jnp.exp(params["a_log"])[None, :])  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", bm[:, 0].astype(jnp.float32), xh * dt[..., None])
+    h_new = h_state * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32), h_new)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("btk,kd->btd", y, params["out_proj"].astype(x.dtype))
+    return out, h_new, conv_new

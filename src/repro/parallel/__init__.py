@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    shard_params_specs,
+)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "logical_to_spec", "shard_params_specs"]

@@ -1,0 +1,12 @@
+"""SCBR — secure content-based routing (the paper's pub/sub substrate [12]).
+
+Subscriptions and publication headers are encrypted on the wire and matched
+only inside the router's "enclave"; payloads are encrypted under a different
+key and are opaque to the router. The MapReduce session-establishment and
+provisioning protocols (paper Figs. 3-4) live in `protocol.py`.
+"""
+
+from repro.pubsub.messages import Message, Subscription
+from repro.pubsub.router import ScbrRouter
+
+__all__ = ["Message", "Subscription", "ScbrRouter"]

@@ -1,0 +1,141 @@
+"""Deterministic virtual-time cluster simulation.
+
+Entities exchange messages only through the SCBR router; the simulator
+charges virtual time for network transfer, per-message enclave transitions,
+cipher streaming, and enclave paging (via each worker's SecurePager). Wall
+time is also tracked for the real crypto work (the ciphers actually run).
+
+Determinism: a single event heap ordered by (time, seq); no wall-clock
+dependence in control flow, so failure/straggler tests are reproducible.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.pubsub.messages import Message
+from repro.pubsub.router import ScbrRouter
+
+
+@dataclass
+class TimingModel:
+    """Virtual-time cost constants (calibrated to paper-era hardware)."""
+
+    net_latency_s: float = 100e-6
+    net_bw_bytes_s: float = 1.0e9  # 10 GbE-ish
+    enclave_call_s: float = 4.0e-6  # ECALL/OCALL round trip
+    crypto_bw_bytes_s: float = 2.0e9  # AES-CTR/ChaCha20 software stream
+    item_cost_s: float = 2.0e-7  # per (key,value) map/reduce work
+    epc_budget_bytes: int = 32 * 1024 * 1024  # usable trusted memory per worker
+
+    def net_delay(self, nbytes: int) -> float:
+        return self.net_latency_s + nbytes / self.net_bw_bytes_s
+
+    def crypto_delay(self, nbytes: int) -> float:
+        return nbytes / self.crypto_bw_bytes_s
+
+
+class Entity:
+    name: str = "?"
+    alive: bool = True
+
+    def attach(self, cluster: "Cluster"):
+        self.cluster = cluster
+
+    def on_message(self, msg: Message):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class Cluster:
+    def __init__(self, header_key: bytes, timing: TimingModel | None = None):
+        self.router = ScbrRouter(header_key)
+        self.timing = timing or TimingModel()
+        self.now = 0.0
+        self._events: list = []
+        self._seq = itertools.count()
+        self.entities: dict[str, Entity] = {}
+        self.delivered_messages = 0
+        self._fifo: dict[tuple[str, str], float] = {}  # per-channel FIFO (ZeroMQ/TCP)
+
+    # -- entity / event plumbing ------------------------------------------------
+
+    def add(self, entity: Entity):
+        self.entities[entity.name] = entity
+        entity.attach(self)
+        return entity
+
+    def schedule(self, delay: float, fn: Callable, *args):
+        heapq.heappush(self._events, (self.now + delay, next(self._seq), fn, args))
+
+    def publish(self, msg: Message, extra_delay: float = 0.0, stream: str = "data"):
+        """Entity -> router -> matching outboxes, with per-target delivery events.
+
+        Deliveries on one (sender, target, stream) channel preserve publish
+        order — the FIFO guarantee a ZeroMQ/TCP connection gives the paper's
+        protocol (EOS must not overtake the data that precedes it). Control
+        traffic (heartbeats) uses its own stream so a busy worker's data queue
+        cannot head-of-line-block its liveness signal.
+        """
+        targets = self.router.publish(msg)
+        for t in targets:
+            at = self.now + self.timing.net_delay(msg.wire_bytes) + extra_delay
+            chan = (msg.sender, t, stream)
+            at = max(at, self._fifo.get(chan, 0.0) + 1e-9)
+            self._fifo[chan] = at
+            self.schedule(at - self.now, self._deliver, t, msg)
+        return targets
+
+    def _deliver(self, target: str, msg: Message):
+        e = self.entities.get(target)
+        if e is None or not e.alive:
+            return  # dropped on the floor — failure detector handles it
+        self.delivered_messages += 1
+        e.on_message(msg)
+
+    def run(self, until: float | None = None, max_events: int = 2_000_000):
+        """Process events up to virtual time `until` (periodic control-plane
+        events — heartbeats, liveness checks — keep the queue nonempty, so an
+        unbounded run only makes sense via `run_until`)."""
+        n = 0
+        while self._events and n < max_events:
+            t, _, fn, args = heapq.heappop(self._events)
+            if until is not None and t > until:
+                self.now = until
+                heapq.heappush(self._events, (t, next(self._seq), fn, args))
+                return
+            self.now = max(self.now, t)
+            fn(*args)
+            n += 1
+        if n >= max_events:
+            raise RuntimeError("event budget exhausted — livelock?")
+
+    def run_until(self, predicate: Callable[[], bool], t_max: float = 300.0,
+                  max_events: int = 5_000_000) -> bool:
+        """Run until `predicate()` holds. Raises on virtual-time/event budget."""
+        n = 0
+        while self._events and n < max_events:
+            if predicate():
+                return True
+            t, _, fn, args = heapq.heappop(self._events)
+            if t > t_max:
+                raise TimeoutError(f"virtual time budget {t_max}s exhausted at t={t:.3f}")
+            self.now = max(self.now, t)
+            fn(*args)
+            n += 1
+        if predicate():
+            return True
+        raise RuntimeError("event queue drained/budget exhausted before completion")
+
+    # -- fault injection ---------------------------------------------------------
+
+    def kill_at(self, name: str, t: float):
+        self.schedule(max(0.0, t - self.now), self._kill, name)
+
+    def _kill(self, name: str):
+        e = self.entities.get(name)
+        if e is not None:
+            e.alive = False
+            self.router.unsubscribe_all(name)

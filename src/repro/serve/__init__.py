@@ -1,0 +1,3 @@
+from repro.serve.engine import cache_specs, decode_step, init_cache, prefill
+
+__all__ = ["init_cache", "cache_specs", "prefill", "decode_step"]

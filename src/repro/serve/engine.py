@@ -1,0 +1,348 @@
+"""Serving: KV/state cache layouts, prefill and one-token decode, per family.
+
+Cache sharding: batch over ('pod','data'); KV heads over 'model' when they
+divide the axis, else the cache *sequence* dim is sharded over 'model'
+(flash-decode style — XLA turns the softmax reduction into partial sums +
+all-reduce). SSM/RWKV states shard their head dim over 'model'.
+
+decode_* / long_* dry-run cells lower `decode_step` with a full-length cache;
+`prefill` serves the prefill_32k cells.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, compute_dtype, embed_apply, mlp_apply, unembed_apply
+from repro.models.lm import _dp, encode_audio
+from repro.models.ssm import HEAD_P, ssm_dims
+
+
+def _kv_head_axis(cfg, mesh):
+    if mesh is None or "model" not in mesh.axis_names:
+        return None, None
+    nm = mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % nm == 0 and cfg.n_kv_heads >= nm:
+        return "model", None  # shard heads
+    return None, "model"  # shard cache sequence
+
+
+def cache_specs(cfg, mesh, batch: int | None = None):
+    """PartitionSpec tree matching init_cache's structure. A batch smaller
+    than the dp axis (long-context, batch=1) stays replicated."""
+    dp = _dp(mesh)
+    if batch is not None and dp is not None and mesh is not None:
+        dp_size = 1
+        for a in dp if isinstance(dp, tuple) else (dp,):
+            dp_size *= mesh.shape[a]
+        if batch % dp_size != 0:
+            dp = None
+    h_ax, s_ax = _kv_head_axis(cfg, mesh)
+    kv = P(None, dp, s_ax, h_ax, None)
+    pos = P(dp)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": kv, "v": kv, "pos": pos}
+    if fam == "hybrid":
+        return {
+            "ssm_h": P(None, dp, "model", None, None),
+            "conv": P(None, dp, None, "model"),
+            "attn_k": kv,
+            "attn_v": kv,
+            "pos": pos,
+        }
+    if fam == "ssm":
+        return {
+            "tshift": P(None, dp, None, None),
+            "wkv": P(None, dp, "model", None, None),
+            "cshift": P(None, dp, None, None),
+            "pos": pos,
+        }
+    if fam == "audio":
+        # cross-attn cache: encoder frames (e.g. 1500) don't divide the model
+        # axis — shard heads when possible, else replicate
+        xkv = P(None, dp, None, h_ax, None)
+        return {"k": kv, "v": kv, "xk": xkv, "xv": xkv, "pos": pos}
+    raise ValueError(fam)
+
+
+def init_cache(cfg, batch: int, max_seq: int, mesh=None, dtype=None):
+    dt = dtype or compute_dtype(cfg)
+    l, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        c = {
+            "k": jnp.zeros((l, batch, max_seq, hkv, dh), dt),
+            "v": jnp.zeros((l, batch, max_seq, hkv, dh), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    elif fam == "hybrid":
+        d_inner, h = ssm_dims(cfg)
+        n_inv = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        c = {
+            "ssm_h": jnp.zeros((l, batch, h, cfg.ssm_state, HEAD_P), jnp.float32),
+            "conv": jnp.zeros((l, batch, cfg.ssm_conv - 1, d_inner), dt),
+            "attn_k": jnp.zeros((max(n_inv, 1), batch, max_seq, hkv, dh), dt),
+            "attn_v": jnp.zeros((max(n_inv, 1), batch, max_seq, hkv, dh), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    elif fam == "ssm":
+        h, dk = rwkv_mod.rwkv_dims(cfg)
+        c = {
+            "tshift": jnp.zeros((l, batch, 1, cfg.d_model), dt),
+            "wkv": jnp.zeros((l, batch, h, dk, dk), jnp.float32),
+            "cshift": jnp.zeros((l, batch, 1, cfg.d_model), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    elif fam == "audio":
+        senc = cfg.encoder_seq
+        c = {
+            "k": jnp.zeros((l, batch, max_seq, hkv, dh), dt),
+            "v": jnp.zeros((l, batch, max_seq, hkv, dh), dt),
+            "xk": jnp.zeros((l, batch, senc, hkv, dh), dt),
+            "xv": jnp.zeros((l, batch, senc, hkv, dh), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    else:
+        raise ValueError(fam)
+    if mesh is not None:
+        specs = cache_specs(cfg, mesh)
+        c = {
+            k: lax.with_sharding_constraint(v, NamedSharding(mesh, specs[k]))
+            for k, v in c.items()
+        }
+    return c
+
+
+# --- prefill --------------------------------------------------------------------
+
+
+def _pad_to(x, s, axis=1):
+    pad = s - x.shape[axis]
+    if pad <= 0:
+        return x
+    shape = list(x.shape)
+    shape[axis] = pad
+    return jnp.concatenate([x, jnp.zeros(shape, x.dtype)], axis=axis)
+
+
+def prefill(cfg, params, tokens, cache, mesh=None, frames=None, secure_moe=None):
+    """Fill the cache with `tokens` (B, Tp); returns (last-token logits, cache)."""
+    b, t = tokens.shape
+    dp = _dp(mesh)
+    if mesh is not None and dp is not None:
+        dpn = 1
+        for a in dp if isinstance(dp, tuple) else (dp,):
+            dpn *= mesh.shape[a]
+        if b % dpn != 0:
+            dp = None
+
+    from repro.models.lm import _seq_ax
+
+    def con(h):
+        if mesh is None:
+            return h
+        seq = _seq_ax(cfg, mesh, h.shape[1]) if h.ndim == 3 else None
+        return lax.with_sharding_constraint(
+            h, NamedSharding(mesh, P(*((dp, seq) + (None,) * (h.ndim - 2))))
+        )
+
+    x = con(embed_apply(cfg, params["embed"], tokens))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        smax = cache["k"].shape[2]
+
+        def step(carry, inp):
+            h = carry
+            if fam == "moe":
+                p = inp
+                hn = apply_norm(cfg, p["ln1"], h)
+                a = attn.self_attention(cfg, p["attn"], hn, positions)
+                k, v = attn.project_kv(cfg, p["attn"], hn, positions)
+                h = h + a
+                y, _, _ = moe_mod.moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], h),
+                                            mesh=mesh, dp_spec=dp or (), secure=secure_moe)
+                h = h + y
+            else:
+                p = inp
+                hn = apply_norm(cfg, p["ln1"], h)
+                a = attn.self_attention(cfg, p["attn"], hn, positions)
+                k, v = attn.project_kv(cfg, p["attn"], hn, positions)
+                h = h + a
+                h = h + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return con(h), (_pad_to(k, smax), _pad_to(v, smax))
+
+        x, (ks, vs) = lax.scan(step, x, params["layers"])
+        cache = dict(cache, k=ks, v=vs, pos=jnp.full((b,), t, jnp.int32))
+
+    elif fam == "ssm":
+        def step(h, p):
+            h2, (tsh, wkv, csh) = B.apply_rwkv_block(cfg, p, h)
+            return con(h2), (tsh, wkv, csh)
+
+        x, (tsh, wkv, csh) = lax.scan(step, x, params["layers"])
+        cache = dict(cache, tshift=tsh, wkv=wkv, cshift=csh,
+                     pos=jnp.full((b,), t, jnp.int32))
+
+    elif fam == "hybrid":
+        smax = cache["attn_k"].shape[2]
+        every = cfg.attn_every or (cfg.n_layers + 1)
+        hs, convs, aks, avs = [], [], [], []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            hn = apply_norm(cfg, p["ln1"], x)
+            y, (h_end, conv_end) = ssm_mod.ssm_apply(cfg, p["ssm"], hn)
+            x = con(x + y)
+            hs.append(h_end)
+            convs.append(conv_end)
+            if (i % every) == (every - 1):
+                sp = params["shared_attn"]
+                hn = apply_norm(cfg, sp["ln1"], x)
+                a = attn.self_attention(cfg, sp["attn"], hn, positions)
+                k, v = attn.project_kv(cfg, sp["attn"], hn, positions)
+                aks.append(_pad_to(k, smax))
+                avs.append(_pad_to(v, smax))
+                x = x + a
+                x = con(x + mlp_apply(cfg, sp["mlp"], apply_norm(cfg, sp["ln2"], x)))
+        cache = dict(
+            cache,
+            ssm_h=jnp.stack(hs),
+            conv=jnp.stack(convs),
+            attn_k=jnp.stack(aks) if aks else cache["attn_k"],
+            attn_v=jnp.stack(avs) if avs else cache["attn_v"],
+            pos=jnp.full((b,), t, jnp.int32),
+        )
+
+    elif fam == "audio":
+        assert frames is not None, "audio prefill needs frontend frames"
+        smax = cache["k"].shape[2]
+        enc_kv = encode_audio(cfg, params, frames, mesh)  # (L, ...) k/v
+
+        def step(h, inp):
+            p, (xk, xv) = inp
+            hn = apply_norm(cfg, p["ln1"], h)
+            a = attn.self_attention(cfg, p["attn"], hn, positions)
+            k, v = attn.project_kv(cfg, p["attn"], hn, positions)
+            h = h + a
+            h = h + attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["lnx"], h),
+                                         (xk, xv), positions)
+            h = h + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return con(h), (_pad_to(k, smax), _pad_to(v, smax))
+
+        x, (ks, vs) = lax.scan(step, x, (params["decoder"], enc_kv))
+        cache = dict(cache, k=ks, v=vs, xk=enc_kv[0], xv=enc_kv[1],
+                     pos=jnp.full((b,), t, jnp.int32))
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(cfg, params["embed"], x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+# --- decode ---------------------------------------------------------------------
+
+
+def decode_step(cfg, params, cache, tokens, mesh=None):
+    """tokens: (B, 1) — append one token; returns (logits (B, V), cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed_apply(cfg, params["embed"], tokens)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def step(h, inp):
+            p, ck, cv = inp
+            hn = apply_norm(cfg, p["ln1"], h)
+            a, nk, nv = attn.decode_self_attention(cfg, p["attn"], hn, ck, cv, pos)
+            h = h + a
+            if fam == "moe":
+                y, _, _ = moe_mod.moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], h),
+                                            mesh=mesh, dp_spec=_dp(mesh) or ())
+                h = h + y
+            else:
+                h = h + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return h, (nk, nv)
+
+        x, (ks, vs) = lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+
+    elif fam == "ssm":
+        def step(h, inp):
+            p, tsh, wkv, csh = inp
+            y, ntsh, nwkv = rwkv_mod.rwkv_time_mix_step(
+                cfg, p["tmix"], apply_norm(cfg, p["ln1"], h), tsh, wkv)
+            h = h + y
+            hn = apply_norm(cfg, p["ln2"], h)
+            y, ncsh = rwkv_mod.rwkv_channel_mix(cfg, p["tmix"], hn, csh)
+            return h + y, (ntsh, nwkv, ncsh)
+
+        x, (tsh, wkv, csh) = lax.scan(
+            step, x, (params["layers"], cache["tshift"], cache["wkv"], cache["cshift"])
+        )
+        cache = dict(cache, tshift=tsh, wkv=wkv, cshift=csh, pos=pos + 1)
+
+    elif fam == "hybrid":
+        every = cfg.attn_every or (cfg.n_layers + 1)
+        hs, convs, aks, avs = [], [], [], []
+        inv = 0
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            hn = apply_norm(cfg, p["ln1"], x)
+            y, nh, nconv = ssm_mod.ssm_decode_step(cfg, p["ssm"], hn,
+                                                   cache["ssm_h"][i], cache["conv"][i])
+            x = x + y
+            hs.append(nh)
+            convs.append(nconv)
+            if (i % every) == (every - 1):
+                sp = params["shared_attn"]
+                hn = apply_norm(cfg, sp["ln1"], x)
+                a, nk, nv = attn.decode_self_attention(
+                    cfg, sp["attn"], hn, cache["attn_k"][inv], cache["attn_v"][inv], pos)
+                aks.append(nk)
+                avs.append(nv)
+                x = x + a
+                x = x + mlp_apply(cfg, sp["mlp"], apply_norm(cfg, sp["ln2"], x))
+                inv += 1
+        cache = dict(
+            cache,
+            ssm_h=jnp.stack(hs),
+            conv=jnp.stack(convs),
+            attn_k=jnp.stack(aks) if aks else cache["attn_k"],
+            attn_v=jnp.stack(avs) if avs else cache["attn_v"],
+            pos=pos + 1,
+        )
+
+    elif fam == "audio":
+        def step(h, inp):
+            p, ck, cv, xk, xv = inp
+            hn = apply_norm(cfg, p["ln1"], h)
+            a, nk, nv = attn.decode_self_attention(cfg, p["attn"], hn, ck, cv, pos)
+            h = h + a
+            h = h + attn.cross_attention(cfg, p["xattn"], apply_norm(cfg, p["lnx"], h),
+                                         (xk, xv), pos[:, None])
+            h = h + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return h, (nk, nv)
+
+        x, (ks, vs) = lax.scan(
+            step, x, (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        )
+        cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(cfg, params["embed"], x)
+    return logits[:, 0].astype(jnp.float32), cache

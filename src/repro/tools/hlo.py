@@ -1,0 +1,391 @@
+"""HLO text-cost engine: loop-aware FLOPs / bytes / collective accounting.
+
+XLA's `compiled.cost_analysis()` visits a while body ONCE — a scan-over-88-
+layers model would be undercounted 88x. This parser rebuilds the call graph
+from optimized HLO text, reads each while's `backend_config known_trip_count`
+(falling back to the loop condition's compare constant), and attributes costs
+recursively through while bodies, fusions, calls and conditionals.
+
+Accounting conventions (mirroring HloCostAnalysis where it is sane):
+  dot            flops = 2 · prod(out dims) · prod(lhs contracting dims)
+  bytes          Σ (operand + output bytes) per instruction, with zero-cost
+                 bookkeeping ops (tuple/gte/parameter/constant/bitcast)
+                 excluded; fusion-internal intermediates are free (only the
+                 fusion node's boundary bytes count)
+  collectives    operand payload bytes + a ring model for per-link traffic:
+                   all-gather          B·(g-1)
+                   all-reduce          2·B·(g-1)/g
+                   reduce-scatter      B·(g-1)/g
+                   all-to-all          B·(g-1)/g
+                   collective-permute  B
+  conditional    max-cost branch (upper bound; a warning is recorded)
+
+The compiled module is the per-device SPMD program, so everything here is
+already per-chip.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ZERO_COST = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_REF = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_list(type_str: str):
+    """All dtype[dims] pairs in a type string (tuple types give several)."""
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for d, dims in shapes:
+        n = 1
+        for x in dims:
+            n *= x
+        total += n * DTYPE_BYTES.get(d, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: list
+    operand_names: list
+    attrs: str
+
+    @property
+    def out_bytes(self):
+        return _bytes_of(self.out_shapes)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_dot: float = 0.0  # dot operand/output traffic only (TPU-optimistic LB)
+    link_bytes: float = 0.0
+    coll_payload: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = field(default_factory=lambda: defaultdict(float))
+    warnings: set = field(default_factory=set)
+
+    def add(self, o: "Costs", mult: float = 1.0):
+        self.flops += o.flops * mult
+        self.bytes += o.bytes * mult
+        self.bytes_dot += o.bytes_dot * mult
+        self.link_bytes += o.link_bytes * mult
+        for k, v in o.coll_payload.items():
+            self.coll_payload[k] += v * mult
+        for k, v in o.coll_count.items():
+            self.coll_count[k] += v * mult
+        self.warnings |= o.warnings
+
+
+def _parse_instr(line: str) -> Instr | None:
+    m = _INSTR.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # output type: leading tuple "(...)" or single "dtype[dims]{layout}"
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, tail = rest[: i + 1], rest[i + 1 :]
+                    break
+        else:
+            return None
+    else:
+        sm = _SHAPE_RE.match(rest)
+        if not sm:
+            return None
+        end = sm.end()
+        if end < len(rest) and rest[end] == "{":  # layout annotation
+            end = rest.find("}", end) + 1
+        type_str, tail = rest[:end], rest[end:]
+    om = _OPCODE.search(tail)
+    if not om:
+        return None
+    opcode = om.group(1)
+    # operands: balanced parens right after the opcode
+    start = om.end() - 1
+    depth = 0
+    endp = len(tail)
+    for i in range(start, len(tail)):
+        if tail[i] == "(":
+            depth += 1
+        elif tail[i] == ")":
+            depth -= 1
+            if depth == 0:
+                endp = i
+                break
+    inner = tail[start + 1 : endp]
+    attrs = tail[endp + 1 :]
+    return Instr(name, opcode, _shape_list(type_str), _REF.findall(inner), attrs)
+
+
+def _split_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    order: list[str] = []
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                order.append(cur)
+        else:
+            if line.strip() == "}":
+                cur = None
+                continue
+            ins = _parse_instr(line)
+            if ins is not None:
+                comps[cur].append(ins)
+    return comps
+
+
+def _trip_count(instr: Instr, comps) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.attrs)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=\s*%?([\w\.\-]+)", instr.attrs)
+    if cm and cm.group(1) in comps:
+        consts = {}
+        for ins in comps[cm.group(1)]:
+            if ins.opcode == "constant":
+                c = re.search(r"constant\((\d+)\)", f"constant({ins.attrs})")
+                # constants carry their value in the operand slot of the text;
+                # re-parse from the raw attrs is unreliable -> skip
+        return None
+    return None
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+class _Analyzer:
+    def __init__(self, comps, default_group: int):
+        self.comps = comps
+        self.g = default_group
+        self.memo: dict[str, Costs] = {}
+
+    def comp_costs(self, name: str) -> Costs:
+        if name in self.memo:
+            return self.memo[name]
+        self.memo[name] = Costs()  # cycle guard
+        symtab = {i.name: i for i in self.comps.get(name, [])}
+        c = Costs()
+        for ins in self.comps.get(name, []):
+            self.instr_costs(ins, symtab, c)
+        self.memo[name] = c
+        return c
+
+    def _operand_bytes(self, ins: Instr, symtab) -> float:
+        """Operand traffic. For fusions, an operand consumed ONLY via
+        dynamic-slice inside the fused computation is charged the SLICE size,
+        not the whole buffer (a scan body reads one layer's stack slice, not
+        the full stacked tensor)."""
+        slice_sizes = None
+        if ins.opcode == "fusion":
+            m = re.search(r"calls=\s*%?([\w\.\-]+)", ins.attrs)
+            fused = self.comps.get(m.group(1)) if m else None
+            if fused:
+                params = [fi for fi in fused if fi.opcode == "parameter"]
+                slice_sizes = []
+                for pi in params:
+                    users = [fi for fi in fused if pi.name in fi.operand_names]
+                    if users and all(u.opcode == "dynamic-slice" for u in users):
+                        slice_sizes.append(sum(u.out_bytes for u in users))
+                    else:
+                        slice_sizes.append(None)
+        total = 0.0
+        for i, r in enumerate(ins.operand_names):
+            if r not in symtab:
+                continue
+            if slice_sizes is not None and i < len(slice_sizes) and slice_sizes[i] is not None:
+                total += slice_sizes[i]
+            else:
+                total += symtab[r].out_bytes
+        return total
+
+    def instr_costs(self, ins: Instr, symtab, c: Costs):
+        op = ins.opcode
+        if op in ZERO_COST:
+            return
+        if op == "while":
+            trips = _trip_count(ins, self.comps)
+            if trips is None:
+                trips = 1
+                c.warnings.add(f"unknown trip count: {ins.name}")
+            bm = re.search(r"body=\s*%?([\w\.\-]+)", ins.attrs)
+            if bm and bm.group(1) in self.comps:
+                c.add(self.comp_costs(bm.group(1)), trips)
+            return
+        if op == "conditional":
+            branches = re.findall(r"%([\w\.\-]+)", ins.attrs)
+            branch_costs = [self.comp_costs(b) for b in branches if b in self.comps]
+            if branch_costs:
+                best = max(branch_costs, key=lambda x: x.flops + x.bytes)
+                c.add(best)
+                c.warnings.add("conditional: max-cost branch attributed")
+            return
+
+        out_b = ins.out_bytes
+        opnd_b = self._operand_bytes(ins, symtab)
+        c.bytes += out_b + opnd_b
+        if op == "dot":
+            c.bytes_dot += out_b + opnd_b
+
+        if op == "dot":
+            k = 1.0
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", ins.attrs)
+            lhs = symtab.get(ins.operand_names[0]) if ins.operand_names else None
+            if cm and lhs is not None and lhs.out_shapes:
+                dims = lhs.out_shapes[0][1]
+                for ci in cm.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(dims):
+                        k *= dims[ci]
+            out_elems = 0
+            for d, dims in ins.out_shapes:
+                n = 1
+                for x in dims:
+                    n *= x
+                out_elems += n
+            c.flops += 2.0 * out_elems * k
+            return
+        if op == "custom-call" and ("matmul" in ins.attrs or "dot" in ins.attrs):
+            c.warnings.add("custom-call matmul: flops estimated from operands")
+            if len(ins.operand_names) >= 2:
+                a = symtab.get(ins.operand_names[0])
+                if a and a.out_shapes and a.out_shapes[0][1]:
+                    k = a.out_shapes[0][1][-1]
+                    out_elems = sum(
+                        _bytes_of([(d, dims)]) / DTYPE_BYTES.get(d, 4)
+                        for d, dims in ins.out_shapes
+                    )
+                    c.flops += 2.0 * out_elems * k
+            return
+        if any(op.startswith(base) for base in COLLECTIVES):
+            if op.endswith("-done"):
+                c.bytes -= out_b + opnd_b  # counted at -start
+                return
+            base = next(b for b in COLLECTIVES if op.startswith(b))
+            payload = opnd_b
+            g = _group_size(ins.attrs, self.g)
+            link = {
+                "all-reduce": 2.0 * payload * (g - 1) / max(g, 1),
+                "all-gather": payload * (g - 1),
+                "reduce-scatter": payload * (g - 1) / max(g, 1),
+                "all-to-all": payload * (g - 1) / max(g, 1),
+                "collective-permute": payload,
+            }[base]
+            c.coll_payload[base] += payload
+            c.coll_count[base] += 1
+            c.link_bytes += link
+            return
+        # fusions / calls / reduces: recurse for flops & collectives, but the
+        # boundary bytes above already cover memory traffic
+        for attr in ("calls", "to_apply"):
+            m = re.search(attr + r"=\s*%?([\w\.\-]+)", ins.attrs)
+            if m and m.group(1) in self.comps:
+                sub = self.comp_costs(m.group(1))
+                c.flops += sub.flops
+                c.link_bytes += sub.link_bytes
+                for k2, v in sub.coll_payload.items():
+                    c.coll_payload[k2] += v
+                for k2, v in sub.coll_count.items():
+                    c.coll_count[k2] += v
+                c.warnings |= sub.warnings
+
+
+def parse_hlo_costs(hlo_text: str, default_group: int = 1) -> dict:
+    comps = _split_computations(hlo_text)
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo_text)
+    entry = m.group(1) if m else None
+    if entry not in comps:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}, "collective_counts": {},
+                "link_bytes": 0, "warnings": ["no entry computation found"]}
+    an = _Analyzer(comps, default_group)
+    c = an.comp_costs(entry)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "bytes_dot": c.bytes_dot,
+        "collectives": dict(sorted(c.coll_payload.items())),
+        "collective_counts": {k: int(v) for k, v in sorted(c.coll_count.items())},
+        "link_bytes": c.link_bytes,
+        "warnings": sorted(c.warnings),
+    }
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> dict:
+    return parse_hlo_costs(hlo_text, default_group)
+
+
+# --- roofline -------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+
+def roofline_terms(cost_analysis: dict, parsed: dict, n_chips: int) -> dict:
+    """Three terms in seconds, per chip, from the parsed (loop-aware) costs."""
+    flops = parsed.get("flops") or cost_analysis.get("flops") or 0.0
+    bts = parsed.get("bytes") or cost_analysis.get("bytes accessed") or 0.0
+    link = parsed.get("link_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bts / HBM_BW
+    t_coll = link / LINK_BW
+    dom = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        # TPU-optimistic lower bound: only matmul operand/output HBM traffic
+        # (CPU HLO's fusion granularity inflates the boundary-bytes count)
+        "memory_lb_s": parsed.get("bytes_dot", 0.0) / HBM_BW,
+        "collective_s": t_coll,
+        "dominant": dom,
+        "flops_per_chip": flops,
+        "bytes_per_chip": bts,
+        "link_bytes_per_chip": link,
+        "warnings": parsed.get("warnings", []),
+    }

@@ -1,0 +1,60 @@
+"""Emit the §Dry-run + §Roofline markdown tables from reports/dryrun.json.
+
+Usage: PYTHONPATH=src python -m repro.tools.report_md [report.json] > tables.md
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.configs import get_config
+from repro.tools.roofline import generate_report, param_counts
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.json"
+    rep = generate_report(path)
+    rows = rep["rows"]
+
+    print("### Dry-run matrix (lower + compile status, peak bytes/device)\n")
+    print("| arch | shape | mesh | status | compile (s) | peak GiB/dev | collectives per step |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "SKIP":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:48]}…) | — | — | — |")
+        elif r["status"] == "OK":
+            coll = r.get("collectives") or {}
+            cstr = ", ".join(f"{k}×{v}" for k, v in coll.items()) or "—"
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | {r['t_compile_s']} | "
+                  f"{r['peak_gib']:.2f} | {cstr} |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | — | — | — |")
+
+    print("\n### Roofline terms (seconds per step per chip; v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s link)\n")
+    print("| arch | shape | mesh | compute | memory | collective | dominant | MODEL/HLO flops | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "OK":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(r['compute_s'])} | "
+              f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | {r['dominant']} | "
+              f"{r['useful_ratio']:.2f} | {r['note']} |")
+
+    print("\n### Parameter counts\n")
+    print("| arch | total params | active/token |")
+    print("|---|---|---|")
+    seen = set()
+    for r in rows:
+        if r["arch"] in seen:
+            continue
+        seen.add(r["arch"])
+        t, a = param_counts(get_config(r["arch"]))
+        print(f"| {r['arch']} | {t/1e9:.2f}B | {a/1e9:.2f}B |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Analytic model FLOPs (6·N·D / 2·N·D) + report generation for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_shape, shape_skips
+from repro.models.ssm import HEAD_P, ssm_dims
+from repro.tools.hlo import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total, active-per-token) parameter counts, embeddings included once."""
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    dh = cfg.head_dim
+    attn = d * cfg.n_heads * dh + 2 * d * cfg.n_kv_heads * dh + cfg.n_heads * dh * d
+    emb = cfg.padded_vocab * d
+
+    if cfg.family == "moe":
+        f = cfg.moe_d_ff or ff
+        router = d * cfg.n_experts
+        expert = 3 * d * f
+        shared = (3 * d * cfg.shared_d_ff + d) if cfg.n_shared_experts else 0
+        layer_total = attn + router + cfg.n_experts * expert + shared
+        layer_active = attn + router + cfg.n_experts_per_tok * expert + shared
+        total = emb + l * layer_total
+        active = emb + l * layer_active
+        return total, active
+    if cfg.family == "ssm":  # rwkv6
+        layer = 5 * d * d + d * 32 + 32 * d + 2 * d * ff + d * d
+        total = emb + l * layer
+        return total, total
+    if cfg.family == "hybrid":
+        d_inner, h = ssm_dims(cfg)
+        n = cfg.ssm_state
+        mamba = d * (2 * d_inner + 2 * n + h) + d_inner * d + cfg.ssm_conv * d_inner
+        shared_attn = attn + 3 * d * ff
+        total = emb + l * mamba + shared_attn
+        return total, total
+    if cfg.family == "audio":
+        enc_layer = attn + 3 * d * ff
+        dec_layer = 2 * attn + 3 * d * ff
+        total = emb + cfg.n_encoder_layers * enc_layer + l * dec_layer
+        return total, total
+    layer = attn + 3 * d * ff  # dense / vlm
+    total = emb + l * layer
+    return total, total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for inference."""
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per sequence
+
+
+def one_sentence(dom: str, cfg, shape) -> str:
+    if dom == "compute":
+        return "at the compute roofline; only kernel-level fusion moves it"
+    if dom == "collective":
+        return ("shrink/overlap collectives: larger per-chip shards, bf16 wire "
+                "payloads, or fewer TP boundaries per layer")
+    if shape.kind == "decode":
+        return "HBM-bound by design (KV/state streaming) — near the decode roofline"
+    return ("reduce HBM round-trips: flash-style attention fusion and less "
+            "remat recompute of wide activations")
+
+
+def generate_report(report_path: str) -> dict:
+    """Digest reports/dryrun.json into the §Dry-run/§Roofline tables."""
+    with open(report_path) as f:
+        results = json.load(f)
+    rows = []
+    for mesh_name in ("single_pod", "multi_pod"):
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape_name in SHAPES:
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                r = results.get(key)
+                if r is None:
+                    continue
+                shape = get_shape(shape_name)
+                if r["status"] == "SKIP":
+                    rows.append({"key": key, "status": "SKIP", "reason": r["reason"],
+                                 "mesh": mesh_name, "arch": arch, "shape": shape_name})
+                    continue
+                if r["status"] != "OK":
+                    rows.append({"key": key, "status": "FAIL", "mesh": mesh_name,
+                                 "arch": arch, "shape": shape_name})
+                    continue
+                rf = r["roofline"]
+                mf = model_flops(cfg, shape)
+                hlo_global = rf["flops_per_chip"] * r["n_chips"]
+                rows.append({
+                    "key": key, "status": "OK", "mesh": mesh_name, "arch": arch,
+                    "shape": shape_name, "n_chips": r["n_chips"],
+                    "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+                    "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+                    "model_flops": mf, "hlo_flops_global": hlo_global,
+                    "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+                    "peak_gib": r["memory"].get("peak_per_device", 0) / 2**30,
+                    "collectives": r.get("collectives", {}).get("collective_counts", {}),
+                    "t_compile_s": r["t_compile_s"],
+                    "note": one_sentence(rf["dominant"], cfg, shape),
+                })
+    return {"rows": rows}

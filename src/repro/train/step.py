@@ -1,0 +1,139 @@
+"""Training step factory: loss/grads/AdamW update + secure batch ingest.
+
+Secure ingest is the paper's data path applied to training: batches arrive
+as ChaCha20 ciphertext (encrypted by the data pipeline on the host /
+MapReduce splits) and are decrypted *inside* the jitted step — plaintext
+tokens exist only in device memory ("inside the enclave"). The per-step
+counter comes in-band so a restart resumes the keystream correctly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.shuffle import SecureShuffleConfig
+from repro.crypto.ctr import decrypt_array
+from repro.models.lm import loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import logical_to_spec, rules_for_mesh
+
+
+@dataclass(frozen=True)
+class SecureIngest:
+    """Session material for encrypted training batches (paper: k_data)."""
+
+    key_words: Any
+    nonce_words: Any
+
+
+def _batch_specs(cfg, mesh, shape_kind="train"):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    specs = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def make_train_step(
+    cfg,
+    mesh: Mesh,
+    *,
+    adamw: AdamWConfig = AdamWConfig(),
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10000,
+    secure_ingest: SecureIngest | None = None,
+    secure_moe: SecureShuffleConfig | None = None,
+    accum_steps: int = 1,
+    donate: bool = True,
+):
+    """Returns (train_step, param_specs, opt_specs, batch_specs).
+
+    train_step(params, opt_state, batch, step) -> (params, opt_state, metrics)
+    `batch["tokens"]` is ciphertext (same shape/dtype) when secure_ingest is
+    set; `batch["ctr"]` carries the keystream block offset for this step.
+    `accum_steps > 1` scans microbatches (gradient accumulation): activation
+    memory shrinks by the factor, grads average across microbatches.
+    """
+    from repro.models.lm import param_axes
+
+    rules = rules_for_mesh(mesh, cfg)
+    p_specs = logical_to_spec(param_axes(cfg), rules)
+    batch_specs = _batch_specs(cfg, mesh)
+
+    grad_fn = jax.value_and_grad(
+        partial(loss_fn, cfg, mesh=mesh, secure_moe=secure_moe), has_aux=True
+    )
+
+    def step_fn(params, opt_state, batch, step):
+        if secure_ingest is not None:
+            ctr = batch["ctr"]
+            batch = dict(batch)
+            # decrypt inside the step: plaintext only in device memory
+            batch["tokens"] = decrypt_array(
+                batch["tokens"], secure_ingest.key_words, secure_ingest.nonce_words, ctr
+            )
+            if "frames" in batch:
+                fr = batch["frames"]
+                batch["frames"] = decrypt_array(
+                    fr, secure_ingest.key_words, secure_ingest.nonce_words,
+                    ctr + jnp.uint32(1 << 16),
+                )
+        batch = {k: v for k, v in batch.items() if k != "ctr"}
+
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(gsum, mb):
+                (l, m), g = grad_fn(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return gsum, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(acc, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32)), ms)
+
+        lr = warmup_cosine(step, peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, lr, adamw)
+        metrics = {"loss": loss, "lr": lr, **metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    # shardings ride in on the avals (NamedSharding-carrying ShapeDtypeStructs
+    # in the dry-run; committed arrays in real training)
+    train_step = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    return train_step, p_specs, batch_specs
+
+
+def init_train_state(cfg, mesh, key, n_model: int | None = None):
+    """Materialize sharded params + optimizer state on the mesh."""
+    from repro.models.lm import init_params, param_axes
+
+    rules = rules_for_mesh(mesh, cfg)
+    p_specs = logical_to_spec(param_axes(cfg), rules)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), p_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    nm = n_model if n_model is not None else mesh.shape.get("model", 1)
+    init = jax.jit(
+        partial(init_params, cfg, n_model=nm), out_shardings=shardings
+    )
+    params = init(key)
+    opt_state = jax.jit(
+        adamw_init,
+        out_shardings={"mu": shardings, "nu": shardings, "count": NamedSharding(mesh, P())},
+    )(params)
+    return params, opt_state

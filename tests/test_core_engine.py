@@ -1,0 +1,147 @@
+"""Secure MapReduce engine: bucketing invariants, wordcount, k-means."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import MapReduceSpec, default_hash, identity_hash, run_mapreduce
+from repro.core.kmeans import generate_points, kmeans_fit, kmeans_step_ref, make_kmeans_step
+from repro.core.shuffle import SecureShuffleConfig, bucket_pack
+from repro.core.wordcount import wordcount
+from repro.crypto import chacha
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _secure_cfg():
+    return SecureShuffleConfig(
+        key_words=chacha.key_to_words(bytes(range(32))),
+        nonce_words=chacha.nonce_to_words(b"\x07" * 12),
+        counter0=100,
+    )
+
+
+# --- bucket_pack properties ---------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 31), min_size=1, max_size=64),
+    st.integers(2, 8),
+)
+def test_bucket_pack_preserves_multiset(keys, r):
+    keys = np.array(keys, np.int32)
+    n = len(keys)
+    vals = np.arange(n, dtype=np.float32)
+    cap = n  # ample capacity
+    bk, bv, dropped = bucket_pack(
+        jnp.asarray(keys), jnp.asarray(keys) % r, jnp.asarray(vals), r, cap
+    )
+    assert int(dropped) == 0
+    got_k = np.asarray(bk).reshape(-1)
+    got_v = np.asarray(bv).reshape(-1)
+    mask = got_k >= 0
+    # multiset of (key, value) pairs preserved
+    got = sorted(zip(got_k[mask].tolist(), got_v[mask].tolist()))
+    want = sorted(zip(keys.tolist(), vals.tolist()))
+    assert got == want
+    # routing correct: row r contains only keys with bucket r
+    for row in range(r):
+        rk = np.asarray(bk)[row]
+        assert np.all((rk < 0) | (rk % r == row))
+
+
+def test_bucket_pack_overflow_counted():
+    keys = jnp.zeros((10,), jnp.int32)  # all to bucket 0
+    bk, _, dropped = bucket_pack(keys, keys, jnp.ones((10,)), 2, 4)
+    assert int(dropped) == 6
+    assert int((np.asarray(bk)[0] >= 0).sum()) == 4
+
+
+# --- wordcount ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("secure", [False, True])
+def test_wordcount(secure):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 50, 2000, dtype=np.int32)
+    counts, dropped = wordcount(
+        toks, 50, _mesh1(), secure=_secure_cfg() if secure else None
+    )
+    assert int(dropped) == 0
+    np.testing.assert_array_equal(np.asarray(counts), np.bincount(toks, minlength=50))
+
+
+# --- k-means -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("secure", [False, True])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_kmeans_step_matches_ref(secure, impl):
+    pts, _ = generate_points(512, 8, seed=1)
+    centers0 = jnp.asarray(pts[:8])
+    step = make_kmeans_step(_mesh1(), secure=_secure_cfg() if secure else None, impl=impl)
+    new, shift = step(jnp.asarray(pts), jnp.ones((512,), jnp.float32), centers0)
+    ref, shift_ref = kmeans_step_ref(jnp.asarray(pts), centers0)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(ref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(shift), float(shift_ref), rtol=1e-4)
+
+
+def test_kmeans_converges_and_recovers_centers():
+    pts, true_centers = generate_points(4000, 5, seed=3, spread=0.02)
+    res = kmeans_fit(pts, 5, _mesh1(), max_iter=100, init="farthest")
+    assert res.n_iter < 100
+    # every true center has a recovered center nearby
+    d = np.linalg.norm(res.centers[:, None, :] - true_centers[None], axis=-1)
+    assert float(d.min(axis=0).max()) < 0.05
+    # paper's termination: shift decreases below diag/1000
+    assert res.center_shift[-1] < res.center_shift[0]
+
+
+def test_kmeans_secure_equals_plain():
+    pts, _ = generate_points(1024, 6, seed=5)
+    r_plain = kmeans_fit(pts, 6, _mesh1(), max_iter=20)
+    r_sec = kmeans_fit(pts, 6, _mesh1(), secure=_secure_cfg(), max_iter=20)
+    assert r_plain.n_iter == r_sec.n_iter
+    np.testing.assert_allclose(
+        np.asarray(r_plain.centers), np.asarray(r_sec.centers), rtol=1e-4, atol=1e-5
+    )
+
+
+# --- generic engine: mean-by-key with combiner --------------------------------
+
+
+def test_engine_mean_by_key():
+    rng = np.random.default_rng(7)
+    n, nk = 512, 16
+    keys = jnp.asarray(rng.integers(0, nk, n, dtype=np.int32))
+    vals = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+
+    def reduce_fn(k, v, valid):
+        seg = jnp.where(valid, k, 0)
+        s = jax.ops.segment_sum(jnp.where(valid, v["s"], 0.0), seg, num_segments=nk)
+        c = jax.ops.segment_sum(jnp.where(valid, v["c"], 0.0), seg, num_segments=nk)
+        s = jax.lax.psum(s, "data")
+        c = jax.lax.psum(c, "data")
+        return s / jnp.maximum(c, 1.0)
+
+    spec = MapReduceSpec(
+        map_fn=lambda k, v: (k, {"s": v, "c": jnp.ones_like(v)}),
+        reduce_fn=reduce_fn,
+        hash_fn=default_hash,
+        capacity=n,
+    )
+    out, dropped = run_mapreduce(spec, keys, vals, _mesh1(), secure=_secure_cfg())
+    assert int(dropped) == 0
+    want = np.zeros(nk)
+    cnt = np.zeros(nk)
+    np.add.at(want, np.asarray(keys), np.asarray(vals))
+    np.add.at(cnt, np.asarray(keys), 1)
+    np.testing.assert_allclose(np.asarray(out), want / np.maximum(cnt, 1), rtol=1e-5)

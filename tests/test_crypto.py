@@ -1,0 +1,216 @@
+"""Crypto substrate tests: RFC 8439 vectors, roundtrips, MAC properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import chacha, ctr, keys, mac
+
+# --- RFC 8439 test vectors -------------------------------------------------
+
+RFC_KEY = bytes(range(32))  # 00 01 02 ... 1f
+RFC_NONCE_232 = bytes.fromhex("000000090000004a00000000")
+# §2.3.2 expected output state (serialized keystream words)
+RFC_BLOCK_232 = np.array(
+    [
+        0xE4E7F110, 0x15593BD1, 0x1FDD0F50, 0xC47120A3,
+        0xC7F4D1C7, 0x0368C033, 0x9AAA2204, 0x4E6CD4C3,
+        0x466482D2, 0x09AA9F07, 0x05D7C214, 0xA2028BD9,
+        0xD19C12B5, 0xB94E16DE, 0xE883D0CB, 0x4E3C50A2,
+    ],
+    dtype=np.uint32,
+)
+
+# §2.4.2 full encryption test
+RFC_NONCE_242 = bytes.fromhex("000000000000004a00000000")
+RFC_PLAINTEXT = (
+    b"Ladies and Gentlemen of the class of '99: If I could offer you "
+    b"only one tip for the future, sunscreen would be it."
+)
+RFC_CIPHERTEXT = bytes.fromhex(
+    "6e2e359a2568f98041ba0728dd0d6981"
+    "e97e7aec1d4360c20a27afccfd9fae0b"
+    "f91b65c5524733ab8f593dabcd62b357"
+    "1639d624e65152ab8f530c359f0861d8"
+    "07ca0dbf500d6a6156a38e088a22b65e"
+    "52bc514d16ccf806818ce91ab7793736"
+    "5af90bbf74a35be6b40b8eedf2785e42"
+    "874d"
+)
+
+
+def test_rfc8439_block_jnp():
+    kw = chacha.key_to_words(RFC_KEY)
+    nw = chacha.nonce_to_words(RFC_NONCE_232)
+    out = np.asarray(chacha.chacha20_block_words(kw, jnp.array([1], jnp.uint32), nw))
+    np.testing.assert_array_equal(out[0], RFC_BLOCK_232)
+
+
+def test_rfc8439_block_numpy():
+    kw = chacha.key_to_words(RFC_KEY)
+    nw = chacha.nonce_to_words(RFC_NONCE_232)
+    out = chacha._chacha20_blocks_np(kw, np.array([1], np.uint32), nw)
+    np.testing.assert_array_equal(out[0], RFC_BLOCK_232)
+
+
+def test_rfc8439_encrypt_bytes():
+    ct = chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_242, 1, RFC_PLAINTEXT)
+    assert ct == RFC_CIPHERTEXT
+    pt = chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_242, 1, ct)
+    assert pt == RFC_PLAINTEXT
+
+
+def test_keystream_words_match_bytes():
+    kw = chacha.key_to_words(RFC_KEY)
+    nw = chacha.nonce_to_words(RFC_NONCE_242)
+    words = np.asarray(chacha.chacha20_keystream_words(kw, nw, 1, 40))
+    raw = chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_242, 1, b"\x00" * 160)
+    np.testing.assert_array_equal(words, np.frombuffer(raw, "<u4")[:40])
+
+
+# --- array / pytree CTR ------------------------------------------------------
+
+KW = chacha.key_to_words(RFC_KEY)
+NW = chacha.nonce_to_words(RFC_NONCE_242)
+
+
+@pytest.mark.parametrize(
+    "shape,dtype",
+    [
+        ((7,), jnp.float32),
+        ((3, 5), jnp.float32),
+        ((4, 4), jnp.bfloat16),
+        ((9,), jnp.int32),
+        ((2, 3, 5), jnp.uint8),
+        ((6,), jnp.int8),
+        ((5,), jnp.uint16),
+    ],
+)
+def test_ctr_roundtrip_dtypes(shape, dtype):
+    x = jax.random.normal(jax.random.key(0), shape).astype(jnp.float32)
+    if jnp.issubdtype(dtype, jnp.integer):
+        x = (x * 10).astype(dtype)
+    else:
+        x = x.astype(dtype)
+    enc = ctr.encrypt_array(x, KW, NW, 0)
+    assert enc.shape == x.shape and enc.dtype == x.dtype
+    dec = ctr.decrypt_array(enc, KW, NW, 0)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(x))
+    # ciphertext differs from plaintext (keystream nonzero w.h.p.)
+    assert not np.array_equal(np.asarray(enc).view(np.uint8), np.asarray(x).view(np.uint8))
+
+
+def test_ctr_encrypt_matches_bytes_path():
+    """In-graph CTR over u32 words == host byte-path encryption."""
+    x = jnp.arange(37, dtype=jnp.uint32)
+    enc = np.asarray(ctr.encrypt_array(x, KW, NW, 0))
+    host = chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_242, 0, np.asarray(x).tobytes())
+    np.testing.assert_array_equal(enc, np.frombuffer(host, "<u4"))
+
+
+def test_ctr_tree_roundtrip_and_disjoint_counters():
+    tree = {
+        "a": jnp.ones((17,), jnp.float32),
+        "b": (jnp.arange(5, dtype=jnp.int32), jnp.full((2, 9), 0.5, jnp.bfloat16)),
+    }
+    enc, ctr_end = ctr.encrypt_tree(tree, KW, NW, 0)
+    assert ctr_end == ctr.tree_counter_blocks(tree)
+    dec, _ = ctr.decrypt_tree(enc, KW, NW, 0)
+    for l0, l1 in zip(jax.tree.leaves(tree), jax.tree.leaves(dec)):
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    # leaves use disjoint counter ranges: identical plaintexts -> different ct
+    t2 = {"a": jnp.zeros((16,), jnp.uint32), "b": jnp.zeros((16,), jnp.uint32)}
+    e2, _ = ctr.encrypt_tree(t2, KW, NW, 0)
+    assert not np.array_equal(np.asarray(e2["a"]), np.asarray(e2["b"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=300), st.integers(0, 2**30))
+def test_hypothesis_bytes_roundtrip(data, counter):
+    ct = chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_232, counter, data)
+    assert len(ct) == len(data)
+    assert chacha.chacha20_encrypt_bytes(RFC_KEY, RFC_NONCE_232, counter, ct) == data
+    if len(data) >= 8:
+        assert ct != data
+
+
+# --- MAC ---------------------------------------------------------------------
+
+
+def test_mac_jnp_matches_host():
+    rs, ss = mac.mac_keys_from_keystream(KW, NW, 7)
+    msg = np.arange(100, dtype=np.uint32) * np.uint32(2654435761)
+    t_host = mac.mac_tag_host(msg, rs, ss)
+    t_dev = np.asarray(mac.mac_tag_words(jnp.asarray(msg), jnp.asarray(rs), jnp.asarray(ss)))
+    np.testing.assert_array_equal(t_host, t_dev)
+
+
+def test_mac_detects_tamper():
+    rs, ss = mac.mac_keys_from_keystream(KW, NW, 3)
+    msg = np.arange(64, dtype=np.uint32)
+    tag = mac.mac_tag_host(msg, rs, ss)
+    bad = msg.copy()
+    bad[10] ^= 1
+    assert not mac.mac_verify_host(bad, rs, ss, tag)
+    assert mac.mac_verify_host(msg, rs, ss, tag)
+
+
+def test_mac_length_extension_guard():
+    rs, ss = mac.mac_keys_from_keystream(KW, NW, 3)
+    a = np.zeros(4, np.uint32)
+    b = np.zeros(5, np.uint32)
+    assert not np.array_equal(mac.mac_tag_host(a, rs, ss), mac.mac_tag_host(b, rs, ss))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64),
+    st.integers(0, 63),
+    st.integers(1, 2**31 - 1),
+)
+def test_hypothesis_mac_tamper(words, pos, delta):
+    rs, ss = mac.mac_keys_from_keystream(KW, NW, 11)
+    msg = np.array(words, np.uint32)
+    tag = mac.mac_tag_host(msg, rs, ss)
+    bad = msg.copy()
+    i = pos % len(bad)
+    bad[i] = np.uint32((int(bad[i]) + delta) % (2**32))
+    if np.array_equal(bad % np.uint64(mac.P31), msg % np.uint64(mac.P31)):
+        return  # same residues -> same tag by design (31-bit field)
+    assert not np.array_equal(mac.mac_tag_host(bad, rs, ss), tag)
+
+
+def test_mulmod31_exhaustive_random():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, mac.P31, size=200, dtype=np.uint32)
+    b = rng.integers(0, mac.P31, size=200, dtype=np.uint32)
+    got = np.asarray(mac._mulmod31(jnp.asarray(a), jnp.asarray(b)))
+    want = ((a.astype(np.uint64) * b.astype(np.uint64)) % np.uint64(mac.P31)).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+# --- keys / attestation -------------------------------------------------------
+
+
+def test_key_hierarchy_and_attestation():
+    kh = keys.KeyHierarchy(master=b"\x42" * 32)
+    m = kh.attestation.enroll(b"worker-code-v1")
+    sk = kh.release_keys(m)
+    assert sk.data != sk.code and len(sk.data) == 32
+    with pytest.raises(PermissionError):
+        kh.release_keys(keys.Attestation.measure(b"evil-code"))
+    # wrap/unwrap roundtrip
+    kek = b"\x99" * 32
+    wrapped = kh.wrap_key("data", kek)
+    assert wrapped != sk.data
+    assert keys.KeyHierarchy.unwrap_key("data", kek, wrapped) == sk.data
+
+
+def test_derive_key_deterministic_and_distinct():
+    m = b"\x01" * 32
+    assert keys.derive_key(m, "data") == keys.derive_key(m, "data")
+    assert keys.derive_key(m, "data") != keys.derive_key(m, "code")

@@ -1,0 +1,70 @@
+"""HLO cost-engine tests: loop-aware flop/collective attribution."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.tools.hlo import parse_hlo_costs, roofline_terms
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    d = 128
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, ()
+        return jax.lax.scan(body, x, ws)[0]
+
+    c = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((8, d, d), jnp.float32),
+    ).compile()
+    p = parse_hlo_costs(c.as_text())
+    assert p["flops"] == pytest.approx(2 * d**3 * 8, rel=0.01)
+    assert not p["warnings"]
+
+
+def test_nested_scan_flops():
+    d = 64
+    def nested(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, ()
+            return jax.lax.scan(inner, c, jnp.arange(3))[0], ()
+        return jax.lax.scan(outer, x, ws)[0]
+
+    c = jax.jit(nested).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((5, d, d), jnp.float32),
+    ).compile()
+    p = parse_hlo_costs(c.as_text())
+    assert p["flops"] == pytest.approx(2 * d**3 * 15, rel=0.01)
+
+
+def test_dot_contraction_dims():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    p = parse_hlo_costs(c.as_text())
+    assert p["flops"] == pytest.approx(2 * 32 * 48 * 16, rel=0.01)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms({}, {"flops": 197e12, "bytes": 1.0, "link_bytes": 0.0}, 1)
+    assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)
+    t = roofline_terms({}, {"flops": 1.0, "bytes": 819e9 * 2, "link_bytes": 0.0}, 1)
+    assert t["dominant"] == "memory" and t["memory_s"] == pytest.approx(2.0)
+    t = roofline_terms({}, {"flops": 0.0, "bytes": 0.0, "link_bytes": 50e9 * 3}, 1)
+    assert t["dominant"] == "collective" and t["collective_s"] == pytest.approx(3.0)
+
+
+def test_bytes_exclude_bookkeeping():
+    """tuple/get-tuple-element/bitcast contribute zero bytes."""
+    d = 256
+    c = jax.jit(lambda x: (x, x.T)).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32)
+    ).compile()
+    p = parse_hlo_costs(c.as_text())
+    # only the transpose/copy should count: well under 10x the array size
+    assert p["bytes"] <= 10 * d * d * 4

@@ -1,0 +1,119 @@
+"""SecVM: oracle agreement, encrypted transport, code confidentiality."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secvm
+from repro.crypto import chacha
+
+KW = chacha.key_to_words(bytes(range(32)))
+NW = chacha.nonce_to_words(b"\x03" * 12)
+
+
+def _poly_prog():
+    # r0 = 2*x^2 + 3*x + 1   (x in r1)
+    return secvm.assemble(
+        [
+            ("LOADC", 2, 0, 0),  # r2 = 2
+            ("LOADC", 3, 0, 1),  # r3 = 3
+            ("LOADC", 0, 0, 2),  # r0 = 1
+            ("MUL", 4, 1, 1),    # r4 = x^2
+            ("FMA", 0, 4, 2),    # r0 += x^2 * 2
+            ("FMA", 0, 1, 3),    # r0 += x * 3
+        ],
+        consts=[2.0, 3.0, 1.0],
+    )
+
+
+def _dist_prog():
+    # r0 = sqrt((x-a)^2 + (y-b)^2), a=0.5 b=-1.5; inputs x=r1, y=r2
+    return secvm.assemble(
+        [
+            ("LOADC", 3, 0, 0),
+            ("LOADC", 4, 0, 1),
+            ("SUB", 5, 1, 3),
+            ("SUB", 6, 2, 4),
+            ("MUL", 5, 5, 5),
+            ("FMA", 5, 6, 6),
+            ("SQRT", 0, 5, 0),
+        ],
+        consts=[0.5, -1.5],
+    )
+
+
+@pytest.mark.parametrize("prog_fn,n_in", [(_poly_prog, 1), (_dist_prog, 2)])
+def test_vm_matches_oracle(prog_fn, n_in):
+    prog = prog_fn()
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n_in, 64)).astype(np.float32)
+    got = secvm.run_program(jnp.asarray(prog.code), jnp.asarray(prog.consts), jnp.asarray(x), prog.out_reg)
+    want = secvm.run_oracle(prog, x)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_encrypted_program_roundtrip():
+    prog = _poly_prog()
+    code_ct, consts_ct = secvm.encrypt_program(prog, KW, NW, 7)
+    # ciphertext is not the plaintext program
+    assert not np.array_equal(np.asarray(code_ct), prog.code)
+    x = np.linspace(-2, 2, 32, dtype=np.float32)[None]
+    got = secvm.run_encrypted(code_ct, consts_ct, jnp.asarray(x), KW, NW, 7)
+    np.testing.assert_allclose(np.asarray(got), 2 * x[0] ** 2 + 3 * x[0] + 1, rtol=1e-5)
+
+
+def test_code_confidentiality_identical_hlo():
+    """Two different programs of equal length lower to IDENTICAL HLO when the
+    bytecode is an input — the platform sees the interpreter, not the code."""
+    p1, p2 = _poly_prog(), _dist_prog()
+    # pad p1 to p2's length with NOPs
+    ln = max(p1.length, p2.length)
+
+    def pad(p):
+        code = np.zeros((ln, 4), np.int32)
+        code[: p.length] = p.code
+        consts = np.zeros((4,), np.float32)
+        consts[: len(p.consts)] = p.consts
+        return code, consts
+
+    def run(code, consts, x):
+        return secvm.run_program(code, consts, x, 0)
+
+    x = jnp.zeros((2, 16), jnp.float32)
+    texts = []
+    for p in (p1, p2):
+        code, consts = pad(p)
+        lowered = jax.jit(run).lower(jnp.asarray(code), jnp.asarray(consts), x)
+        texts.append(lowered.as_text())
+    assert texts[0] == texts[1]
+
+
+def test_vm_in_mapreduce_map_fn():
+    """SecVM program as the map function of a secure MapReduce job."""
+    from repro.core.engine import MapReduceSpec, identity_hash, run_mapreduce
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    prog = _poly_prog()
+    code_ct, consts_ct = secvm.encrypt_program(prog, KW, NW, 0)
+
+    def map_fn(k, v):
+        out = secvm.run_encrypted(code_ct, consts_ct, v[None, :], KW, NW, 0)
+        return k, out
+
+    def reduce_fn(k, v, valid):
+        seg = jnp.where(valid, k, 0)
+        return jax.lax.psum(
+            jax.ops.segment_sum(jnp.where(valid, v, 0.0), seg, num_segments=4), "data"
+        )
+
+    keys = jnp.array([0, 1, 2, 3, 0, 1], jnp.int32)
+    vals = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0], jnp.float32)
+    out, dropped = run_mapreduce(
+        MapReduceSpec(map_fn, reduce_fn, hash_fn=identity_hash, capacity=8), keys, vals, mesh
+    )
+    f = lambda x: 2 * x**2 + 3 * x + 1
+    want = [f(1) + f(5), f(2) + f(6), f(3), f(4)]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)
+    assert int(dropped) == 0
