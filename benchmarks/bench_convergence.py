@@ -11,11 +11,12 @@ import time
 
 import jax
 
+from repro.compat import make_mesh
 from repro.core.kmeans import generate_points, kmeans_fit
 
 
 def run():
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     pts, _ = generate_points(20000, 10, seed=0, spread=0.08)
 
     t0 = time.perf_counter()

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core.kmeans import generate_points, make_kmeans_step
 from repro.core.shuffle import SecureShuffleConfig
 from repro.crypto import chacha
@@ -65,7 +66,7 @@ def run():
                      f"{encl_ovh * 100:.1f}%"))
 
     # (b) device-level real wall time: secure vs plain shuffle
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     pts2, _ = generate_points(50000, 10, seed=3)
     pts2 = jnp.asarray(pts2)
     w = jnp.ones((pts2.shape[0],), jnp.float32)

@@ -13,6 +13,7 @@ import numpy as np
 
 import jax
 
+from repro.compat import make_mesh
 from repro.core.shuffle import SecureShuffleConfig
 from repro.core.wordcount import wordcount
 from repro.crypto import chacha
@@ -40,7 +41,7 @@ def main():
     vocab = 1000
     rng = np.random.default_rng(0)
     tokens = rng.integers(0, vocab, 20000, dtype=np.int32)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     secure = SecureShuffleConfig(
         key_words=chacha.key_to_words(bytes(range(32))),
         nonce_words=chacha.nonce_to_words(b"\x01" * 12),

@@ -16,6 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCH_IDS, get_config
 from repro.crypto.keys import make_session_keys
@@ -39,7 +40,7 @@ def main():
     cfg = get_config(args.arch).reduced()
     if cfg.family == "audio":
         raise SystemExit("audio arch: use serve_lm.py (training driver is LM-style)")
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
 
     session = make_session_keys(b"\x42" * 32)
     ingest = SecureIngest(key_words=session.words("data"),

@@ -4,6 +4,9 @@ Two execution levels implement the same model:
   * device level (`engine.py`): map/combine/shuffle/reduce inside one jitted
     shard_map program; the shuffle is a keyed `all_to_all` whose payload is
     ChaCha20-encrypted before leaving the chip ("enclave") in secure mode.
+    `driver.py` fuses N such rounds (iterative jobs: k-means, sampling sort,
+    streaming grep) into one dispatch via `lax.scan`, with a per-round
+    keystream guaranteed by the round-index nonce layout in `shuffle.py`.
   * cluster level (`repro.runtime`): the paper's pub/sub-coordinated client/
     worker protocol over encrypted splits, with fault tolerance.
 
@@ -14,6 +17,14 @@ Plus the two SGX-specific mechanisms, adapted:
     budget; evict=>encrypt+MAC, fetch=>decrypt+verify+freshness).
 """
 
+from repro.core.driver import IterativeSpec, make_iterative_runner, run_iterative_mapreduce
 from repro.core.engine import MapReduceSpec, SecureShuffleConfig, run_mapreduce
 
-__all__ = ["MapReduceSpec", "SecureShuffleConfig", "run_mapreduce"]
+__all__ = [
+    "IterativeSpec",
+    "MapReduceSpec",
+    "SecureShuffleConfig",
+    "make_iterative_runner",
+    "run_iterative_mapreduce",
+    "run_mapreduce",
+]

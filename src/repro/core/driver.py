@@ -1,0 +1,202 @@
+"""Iterative secure MapReduce driver: N rounds inside ONE jitted dispatch.
+
+Why
+---
+The paper's headline workload — k-means — is an *iterative* MapReduce job,
+yet `repro.core.engine.run_mapreduce` executes exactly one
+map→shuffle→reduce round per dispatch, so every iteration pays a host
+round-trip, fresh argument transfers, and (in secure mode) re-derived
+keystream setup. SGX-MR (arXiv:2009.03518) makes the same observation for
+enclaves: regulating the whole dataflow inside the trusted boundary, not
+per-round hops through untrusted orchestration, is what keeps overhead low.
+This driver runs the full round loop as a single `lax.scan` under
+`shard_map`, so a converged k-means run costs O(n_rounds / rounds_per_dispatch)
+host round-trips instead of O(n_rounds).
+
+Round structure
+---------------
+Each round r of `run_iterative_mapreduce` executes, per shard:
+
+    mapped_k, mapped_v = spec.map_fn(state, inputs, r)      # "mapper enclave"
+    [mapped_k, mapped_v = spec.combine_fn(mapped_k, mapped_v)]
+    bucket  = spec.hash_fn(mapped_k) % R
+    send    = bucket_pack(...)                              # fixed (R, C, ...)
+    recv    = keyed_all_to_all(send, axis, secure, round_index=r)
+    state, aux = spec.reduce_fn(state, keys, values, valid, r)   # "reducer"
+
+and the scan threads `state` (e.g. k-means centroids) into the next round.
+Per-round aux (stacked over rounds) and per-round overflow counts
+(`n_dropped`, psum'd over shards) come back to the host so convergence can
+be judged — and a mid-chunk convergence point recovered from aux — without
+re-entering the device loop.
+
+Carried-state contract
+----------------------
+`state` is REPLICATED: every shard holds the same value on entry, and
+`reduce_fn` must restore replication before returning (end in a collective —
+psum / all_gather — exactly like the paper's "client redistributes the new
+centers" step). The driver shards `inputs` over the mesh axis and replicates
+`state`/`aux` (out_specs `P()`); a reduce_fn that returns shard-varying
+state is a bug the shuffle cannot fix.
+
+Counter-space layout (extends core/shuffle.py)
+----------------------------------------------
+A multi-round job performs many encrypted shuffles under one session key.
+The per-shuffle layout (nonce word 0 ^= source index, counter = ctr0 +
+leaf_offset + dest_row·blocks_per_row) is unchanged; the driver additionally
+XORs the round index into nonce word 1 via
+`keyed_all_to_all(..., round_index=r)`. The keystream spaces of distinct
+rounds are therefore disjoint by construction — reusing one (as the
+per-round Python loop historically did, re-dispatching with an identical
+nonce/counter every iteration) is a two-time pad. The round index is part
+of the replicated loop state; both endpoints derive the keystream locally
+and nothing about it crosses the wire.
+
+The index is GLOBAL across dispatches: a convergence loop that calls the
+same runner in chunks passes `round_offset` = rounds already executed, so
+chunk 2 continues at round n_rounds, not back at round 0 (which would
+reuse chunk 1's keystreams). `kmeans_fit` threads its iteration counter
+through exactly this way.
+
+Workloads on the driver: `repro.core.kmeans` (paper §V), `repro.core.sort`
+(TeraSort-style sampling sort with splitter refinement), `repro.core.grep`
+(multi-round streaming grep).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core.engine import default_hash
+from repro.core.shuffle import SecureShuffleConfig, bucket_pack, keyed_all_to_all
+
+
+@dataclass(frozen=True)
+class IterativeSpec:
+    """A multi-round MapReduce job over fixed-shape shards.
+
+    map_fn(state, inputs, round_index) -> (mapped_keys, mapped_values)
+        Per-shard, vectorized. `inputs` is the (local slice of the) sharded
+        input pytree; `round_index` is a traced u32 scalar for round-varying
+        behavior (streaming slices, phase switches).
+    combine_fn(keys, values) -> (keys, values)
+        Optional local pre-aggregation before the shuffle.
+    reduce_fn(state, keys, values, valid, round_index) -> (new_state, aux)
+        Per-shard over the received pairs; must restore state replication
+        (end in psum/all_gather). `aux` is any pytree of per-round
+        diagnostics (stacked over rounds by the scan).
+    hash_fn(keys) -> u32
+        destination shard = hash_fn(k) % R.
+    capacity:  per-destination slots C; 0 -> auto (ceil(n_mapped / R) * 2).
+    n_rounds:  rounds fused into one dispatch.
+    """
+
+    map_fn: Callable[[Any, Any, Any], tuple]
+    reduce_fn: Callable[[Any, Any, Any, Any, Any], tuple]
+    combine_fn: Callable[[Any, Any], tuple] | None = None
+    hash_fn: Callable = default_hash
+    capacity: int = 0
+    n_rounds: int = 1
+
+
+def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shards: int,
+                secure: SecureShuffleConfig | None):
+    mk, mv = spec.map_fn(state, inputs, r)
+    if spec.combine_fn is not None:
+        mk, mv = spec.combine_fn(mk, mv)
+    n_mapped = mk.shape[0]
+    capacity = spec.capacity or max(1, -(-n_mapped // n_shards) * 2)
+
+    bucket = (spec.hash_fn(mk) % jnp.uint32(n_shards)).astype(jnp.int32)
+    bk, bv, dropped = bucket_pack(mk, bucket, mv, n_shards, capacity)
+
+    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure, round_index=r)
+    flat_k = recv["k"].reshape(-1)
+    flat_v = compat.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), recv["v"])
+    valid = flat_k >= 0
+
+    new_state, aux = spec.reduce_fn(state, flat_k, flat_v, valid, r)
+    return new_state, (aux, lax.psum(dropped, axis_name))
+
+
+def _shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axis_name: str,
+                n_shards: int, secure: SecureShuffleConfig | None):
+    rounds = jnp.asarray(round_offset, jnp.uint32) + jnp.arange(spec.n_rounds, dtype=jnp.uint32)
+    body = partial(_round_body, inputs=inputs, spec=spec, axis_name=axis_name,
+                   n_shards=n_shards, secure=secure)
+    final_state, (aux, dropped) = lax.scan(body, state, rounds)
+    return final_state, aux, dropped
+
+
+def make_iterative_runner(
+    spec: IterativeSpec,
+    mesh: Mesh,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+):
+    """Build the jitted fused-round function once; call it many times.
+
+    Returns fn(inputs, state, round_offset=0) ->
+    (final_state, aux_per_round, dropped_per_round) where aux leaves and
+    `dropped` carry a leading (n_rounds,) dim.
+
+    `round_offset` is the GLOBAL index of the chunk's first round. Callers
+    that dispatch the same runner repeatedly (convergence loops) MUST pass
+    the running total of completed rounds: the scan executes global rounds
+    offset..offset+n_rounds-1, and that global index is what map_fn /
+    reduce_fn receive and what keys the per-round keystream — restarting it
+    at 0 every chunk would reuse round-0's keystream across chunks (a
+    two-time pad). It is a traced scalar: varying it never recompiles.
+    """
+    n_shards = mesh.shape[axis_name]
+    body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards,
+                   secure=secure)
+
+    def in_specs(inputs_tree):
+        return compat.tree_map(lambda _: P(axis_name), inputs_tree)
+
+    def run(inputs, state, round_offset=0):
+        fn = compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(in_specs(inputs), compat.tree_map(lambda _: P(), state), P()),
+            out_specs=(
+                compat.tree_map(lambda _: P(), state),
+                P(),
+                P(),
+            ),
+            check_vma=False,
+        )
+        return fn(inputs, state, jnp.asarray(round_offset, jnp.uint32))
+
+    return jax.jit(run)
+
+
+def run_iterative_mapreduce(
+    spec: IterativeSpec,
+    inputs,
+    init_state,
+    mesh: Mesh,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+    round_offset: int = 0,
+):
+    """One-shot convenience: run `spec.n_rounds` fused rounds over
+    `mesh[axis_name]`. `inputs` is a pytree sharded on the leading dim;
+    `init_state` is replicated carried state. `round_offset`: see
+    `make_iterative_runner` — pass the count of rounds already executed
+    when continuing a job across dispatches.
+
+    Returns (final_state, aux_per_round, dropped_per_round) — dropped has
+    shape (n_rounds,) and must be all-zero for a lossless job.
+    """
+    runner = make_iterative_runner(spec, mesh, axis_name, secure)
+    return runner(inputs, init_state, round_offset)

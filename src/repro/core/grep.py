@@ -1,0 +1,90 @@
+"""Multi-round streaming grep on the iterative secure MapReduce driver.
+
+The grep workload from the MapReduce canon: mappers scan records for the
+patterns, emit (pattern_id, 1) per hit, reducers sum per pattern. Here the
+corpus is processed as a *stream*: each shard holds n_rounds chunks, round r
+maps only chunk r (`lax.dynamic_slice` on the round index), and the running
+per-pattern hit counts are the carried state. One fused dispatch greps the
+whole corpus — the round loop never leaves the device, and in secure mode
+every round's shuffle draws a disjoint keystream via the round-index nonce
+layout in `core/shuffle.py`.
+
+Patterns are token ids over a fixed vocabulary (the same modeling of "words"
+as `core/wordcount.py`); a hit is an exact token match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.core.driver import IterativeSpec, run_iterative_mapreduce
+from repro.core.engine import identity_hash
+from repro.core.shuffle import SecureShuffleConfig
+
+
+def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
+                   n_rounds: int = 1) -> IterativeSpec:
+    """Driver spec: state = running (n_patterns,) hit counts (replicated)."""
+    patterns = jnp.asarray(patterns, jnp.int32)
+    n_pat = patterns.shape[0]
+
+    def map_fn(state, inputs, r):
+        start = (r.astype(jnp.int32) * chunk,)
+        toks = lax.dynamic_slice(inputs["t"], start, (chunk,))
+        # pattern id per token, -1 (engine padding) where nothing matches
+        eq = toks[:, None] == patterns[None, :]
+        pid = jnp.where(jnp.any(eq, axis=1), jnp.argmax(eq, axis=1), -1).astype(jnp.int32)
+        return pid, {"one": jnp.ones((chunk,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        seg = jnp.where(valid, rk, 0)
+        hits = jax.ops.segment_sum(jnp.where(valid, rv["one"], 0.0), seg,
+                                   num_segments=n_pat)
+        hits = lax.psum(hits, axis_name)
+        new_state = state + hits
+        return new_state, {"round_hits": hits}
+
+    return IterativeSpec(
+        map_fn=map_fn,
+        reduce_fn=reduce_fn,
+        hash_fn=identity_hash,  # reducer = pattern_id % R
+        capacity=chunk,  # lossless: a chunk may be all one pattern
+        n_rounds=n_rounds,
+    )
+
+
+def grep_count(
+    tokens,
+    patterns,
+    mesh: Mesh,
+    *,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+    n_rounds: int = 4,
+):
+    """Count occurrences of each pattern token in `tokens` (int32, sharded).
+
+    The per-shard stream is split into `n_rounds` chunks processed by
+    successive fused rounds (the round index doubles as the stream cursor,
+    so this job always starts at round_offset 0). Returns
+    (counts (n_patterns,), per_round_hits (n_rounds, n_patterns),
+    dropped (n_rounds,)).
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    n = tokens.shape[0]
+    r = mesh.shape[axis_name]
+    n_loc = n // r
+    if n != n_loc * r or n_loc % n_rounds != 0:
+        raise ValueError(f"n={n} must split into {r} shards x {n_rounds} chunks")
+    chunk = n_loc // n_rounds
+
+    patterns = jnp.asarray(patterns, jnp.int32)
+    spec = make_grep_spec(patterns, chunk, axis_name=axis_name, n_rounds=n_rounds)
+    init = jnp.zeros((patterns.shape[0],), jnp.float32)
+    final, aux, dropped = run_iterative_mapreduce(
+        spec, {"t": tokens}, init, mesh, axis_name=axis_name, secure=secure
+    )
+    return final, aux["round_hits"], dropped

@@ -10,6 +10,15 @@ center row is contributed by exactly one owner).
 
 Termination (§V): iterate until the average distance between consecutive
 centers drops below a threshold; the paper uses diag/1000 of the bounding box.
+
+Two execution paths share the identical per-round math:
+  * `make_kmeans_step` — one iteration per dispatch (the historical loop;
+    kept as the oracle for equivalence tests);
+  * `kmeans_fit` — fuses `rounds_per_dispatch` iterations into a single
+    dispatch via `repro.core.driver.run_iterative_mapreduce` (`lax.scan`
+    under shard_map), cutting host round-trips by that factor. Per-round
+    centers/shifts come back as stacked aux, so the convergence point is
+    recovered exactly even when it lands mid-chunk.
 """
 
 from __future__ import annotations
@@ -22,8 +31,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.core.driver import IterativeSpec, make_iterative_runner
 from repro.core.engine import MapReduceSpec, identity_hash
 from repro.core.shuffle import SecureShuffleConfig, bucket_pack, keyed_all_to_all
 from repro.kernels.kmeans.ops import kmeans_assign
@@ -35,31 +46,28 @@ class KMeansResult:
     n_iter: int
     center_shift: list  # avg centroid move per iteration
     inertia: float
+    n_dispatches: int = 0  # host->device round-trips spent on iterations
 
 
-def _kmeans_shard_step(points, weights, centers, *, axis_name, n_shards, secure, impl):
-    """One k-means iteration on one shard (runs inside shard_map)."""
+def _assign_partials(points, weights, centers, impl):
+    """Map + combine: fused assign + local per-center partials ("enclave")."""
     k = centers.shape[0]
-    # -- map + combine: fused assign + local per-center partials ("enclave")
     _, sums, counts = kmeans_assign(points, centers, weights, impl=impl)
-
-    # -- shuffle: centroid partials to owner reducer hash(c) % R
     keys = jnp.arange(k, dtype=jnp.int32)
-    bucket = keys % n_shards
-    capacity = -(-k // n_shards)
-    bk, bv, _ = bucket_pack(keys, bucket, {"s": sums, "c": counts}, n_shards, capacity)
-    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure)
+    return keys, {"s": sums, "c": counts}
 
-    rk = recv["k"].reshape(-1)
-    rs = recv["v"]["s"].reshape(-1, sums.shape[1])
-    rc = recv["v"]["c"].reshape(-1)
-    valid = rk >= 0
+
+def _reduce_centers(centers, rk, rv, valid, *, axis_name, n_shards):
+    """Reduce + redistribute: own-center aggregation, psum assembly, shift."""
+    k = centers.shape[0]
+    rs = rv["s"]
+    rc = rv["c"]
     seg = jnp.where(valid, rk, 0)
     own_sums = jax.ops.segment_sum(jnp.where(valid[:, None], rs, 0.0), seg, num_segments=k)
     own_counts = jax.ops.segment_sum(jnp.where(valid, rc, 0.0), seg, num_segments=k)
 
-    # -- reduce output redistribution: each center row owned by exactly one
-    # reducer; psum assembles the full table on every shard (client gather).
+    # each center row owned by exactly one reducer; psum assembles the full
+    # table on every shard (client gather) — restores state replication.
     my = lax.axis_index(axis_name)
     mine = (jnp.arange(k) % n_shards) == my
     total_sums = lax.psum(jnp.where(mine[:, None], own_sums, 0.0), axis_name)
@@ -72,9 +80,23 @@ def _kmeans_shard_step(points, weights, centers, *, axis_name, n_shards, secure,
     return new_centers, shift
 
 
+def _kmeans_shard_step(points, weights, centers, *, axis_name, n_shards, secure, impl):
+    """One k-means iteration on one shard (runs inside shard_map)."""
+    k = centers.shape[0]
+    keys, partials = _assign_partials(points, weights, centers, impl)
+    bucket = keys % n_shards
+    capacity = -(-k // n_shards)
+    bk, bv, _ = bucket_pack(keys, bucket, partials, n_shards, capacity)
+    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure)
+
+    rk = recv["k"].reshape(-1)
+    rv = compat.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), recv["v"])
+    return _reduce_centers(centers, rk, rv, rk >= 0, axis_name=axis_name, n_shards=n_shards)
+
+
 def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleConfig | None = None,
                      impl: str = "jnp"):
-    """Build the jitted one-iteration function over `mesh`."""
+    """Build the jitted one-iteration function over `mesh` (oracle path)."""
     n_shards = mesh.shape[axis_name]
     body = partial(
         _kmeans_shard_step,
@@ -83,7 +105,7 @@ def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleC
         secure=secure,
         impl=impl,
     )
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P()),
@@ -91,6 +113,46 @@ def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleC
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
+                               n_rounds: int = 1, axis_name: str = "data") -> IterativeSpec:
+    """The same per-round math as `make_kmeans_step`, as a driver spec.
+
+    Carried state = the (k, d) center table (replicated); aux per round =
+    {"centers", "shift"} so convergence mid-chunk is recoverable on the host.
+    """
+
+    def map_fn(centers, inputs, r):
+        return _assign_partials(inputs["p"], inputs["w"], centers, impl)
+
+    def reduce_fn(centers, rk, rv, valid, r):
+        new_centers, shift = _reduce_centers(
+            centers, rk, rv, valid, axis_name=axis_name, n_shards=n_shards
+        )
+        return new_centers, {"centers": new_centers, "shift": shift}
+
+    return IterativeSpec(
+        map_fn=map_fn,
+        reduce_fn=reduce_fn,
+        hash_fn=identity_hash,
+        capacity=-(-k // n_shards),
+        n_rounds=n_rounds,
+    )
+
+
+def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
+                       secure: SecureShuffleConfig | None = None, impl: str = "jnp",
+                       rounds_per_dispatch: int = 8):
+    """Prebuild the fused-round runner for `kmeans_fit` (shareable jit cache).
+
+    Returns (runner, rounds_per_dispatch); pass the pair as `kmeans_fit`'s
+    `runner=` to amortize the (expensive, secure-mode) XLA compile across
+    many fits with the same k/mesh/secure/impl.
+    """
+    spec = make_kmeans_iterative_spec(k, mesh.shape[axis_name], impl=impl,
+                                      n_rounds=rounds_per_dispatch, axis_name=axis_name)
+    return make_iterative_runner(spec, mesh, axis_name, secure), rounds_per_dispatch
 
 
 def kmeans_fit(
@@ -106,11 +168,23 @@ def kmeans_fit(
     init_centers=None,
     init: str = "first",
     weights=None,
+    rounds_per_dispatch: int = 8,
+    runner=None,
 ) -> KMeansResult:
     """Iterate to convergence. threshold=None -> paper's diag/1000 rule.
 
     init: "first" (paper-style arbitrary start) or "farthest" (greedy
     farthest-point, k-means++-like, robust to clumped starts).
+
+    `rounds_per_dispatch` iterations run fused inside one jitted scan
+    (`run_iterative_mapreduce`); the host only inspects the stacked per-round
+    shifts between chunks, so a converged run costs ~n_iter/rounds_per_dispatch
+    device dispatches (`KMeansResult.n_dispatches`) instead of n_iter. The
+    global iteration count is threaded into each chunk as the driver's
+    round_offset, keeping every secure round's keystream disjoint across
+    dispatches. `runner`: a prebuilt `make_kmeans_runner(...)` result to
+    reuse its jit cache across fits (must match k/mesh/secure/impl/
+    rounds_per_dispatch).
     """
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -125,14 +199,39 @@ def kmeans_fit(
         hi = jnp.max(points, axis=0)
         threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0  # paper §V
 
-    step = make_kmeans_step(mesh, axis_name, secure, impl)
-    shifts = []
+    rounds = max(1, min(rounds_per_dispatch, max_iter))
+    if runner is None:
+        runner, rounds = make_kmeans_runner(
+            mesh, k, axis_name=axis_name, secure=secure, impl=impl,
+            rounds_per_dispatch=rounds,
+        )
+    else:
+        runner, rounds = runner
+    inputs = {"p": points, "w": jnp.asarray(weights, jnp.float32)}
+
+    shifts: list[float] = []
     it = 0
-    for it in range(1, max_iter + 1):
-        centers, shift = step(points, weights, centers)
-        shifts.append(float(shift))
-        if shifts[-1] < threshold:
+    n_dispatches = 0
+    while it < max_iter:
+        # round_offset = iterations already done: keeps the global round
+        # index (and thus the secure keystream space) advancing across chunks
+        final, aux, _dropped = runner(inputs, centers, it)
+        n_dispatches += 1
+        chunk_shifts = np.asarray(aux["shift"])
+        converged_j = None
+        for j in range(rounds):
+            it += 1
+            shifts.append(float(chunk_shifts[j]))
+            if shifts[-1] < threshold:
+                converged_j = j
+                break
+            if it >= max_iter:
+                converged_j = j
+                break
+        if converged_j is not None:
+            centers = jnp.asarray(aux["centers"])[converged_j]
             break
+        centers = final
 
     d2 = (
         jnp.sum(points * points, axis=1, keepdims=True)
@@ -140,7 +239,8 @@ def kmeans_fit(
         - 2.0 * points @ centers.T
     )
     inertia = float(jnp.sum(jnp.min(d2, axis=1)))
-    return KMeansResult(centers=centers, n_iter=it, center_shift=shifts, inertia=inertia)
+    return KMeansResult(centers=centers, n_iter=it, center_shift=shifts, inertia=inertia,
+                        n_dispatches=n_dispatches)
 
 
 def _farthest_point_init(points, k: int):

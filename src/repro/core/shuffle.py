@@ -11,11 +11,19 @@ Secure mode encrypts the send buffer *before* the collective and decrypts
 after: ciphertext is what crosses the chip boundary ("enclave exit"), exactly
 the paper's trust model for the mapper→reducer network. Counter-space layout
 guarantees (key, nonce, counter) uniqueness:
-  nonce  = base_nonce XOR source_index        (word 0)
-  ctr    = ctr0 + leaf_offset + dest_row * blocks_per_row(leaf)
+  nonce word 0 = base_nonce[0] XOR source_index
+  nonce word 1 = base_nonce[1] XOR round_index     (iterative driver rounds)
+  ctr          = ctr0 + leaf_offset + dest_row * blocks_per_row(leaf)
 so the receiver of row s (sent by source s while it sat at row `my_index` of
 s's buffer) can reconstruct the exact keystream without any key exchange
 beyond the session key.
+
+The round index dimension exists for `repro.core.driver`: a multi-round job
+runs many shuffles under one session key, and reusing the keystream across
+rounds would be a classic two-time pad. XORing the (traced) round index into
+nonce word 1 gives every round a disjoint keystream while both endpoints of
+the collective can still derive it locally — the round counter is part of
+the shared loop state, never transmitted.
 """
 
 from __future__ import annotations
@@ -92,9 +100,17 @@ def _row_blocks(leaf_row_shape, dtype) -> int:
     return -(-words_for(leaf_row_shape, dtype) // 16)
 
 
-def _keystream_rows(cfg: SecureShuffleConfig, nonce_ids, ctr_rows, offset, blocks, n_words):
-    """Per-row keystream: row i uses nonce^nonce_ids[i], ctr offset+ctr_rows[i]·blocks."""
+def _keystream_rows(cfg: SecureShuffleConfig, nonce_ids, ctr_rows, offset, blocks, n_words,
+                    round_id=None):
+    """Per-row keystream: row i uses nonce^nonce_ids[i], ctr offset+ctr_rows[i]·blocks.
+
+    `round_id` (scalar u32, may be traced) is XORed into nonce word 1 so every
+    round of an iterative job draws from a disjoint keystream.
+    """
     base_nonce = jnp.asarray(cfg.nonce_words, jnp.uint32)
+    if round_id is not None:
+        r = jnp.asarray(round_id, jnp.uint32)
+        base_nonce = base_nonce.at[1].set(base_nonce[1] ^ r)
 
     def one(nid, crow):
         nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
@@ -130,23 +146,27 @@ def _unpack_wire(wires, meta, treedef):
     return jax.tree.unflatten(treedef, leaves)
 
 
-def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows):
+def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows, round_id=None):
     out = []
     offset = jnp.uint32(cfg.counter0)
     for words, (shape, dtype, _pad) in zip(wires, meta):
         r, n_words = words.shape
         blocks = _row_blocks(shape[1:], dtype)
-        ks = _keystream_rows(cfg, nonce_ids, ctr_rows, offset, blocks, n_words)
+        ks = _keystream_rows(cfg, nonce_ids, ctr_rows, offset, blocks, n_words, round_id)
         out.append(words ^ ks)
         offset = offset + jnp.uint32(blocks * r)
     return out
 
 
-def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = None):
+def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = None,
+                     round_index=None):
     """all_to_all every (R, C, ...) leaf; row i of the result came from source i.
 
     In secure mode leaves are packed to u32 wire words, encrypted, exchanged,
     decrypted, and unpacked — only ciphertext crosses the inter-chip link.
+    `round_index` (scalar, may be traced — e.g. a `lax.scan` carry from the
+    iterative driver) selects a disjoint keystream per round; None is
+    equivalent to round 0.
     """
     if secure is None:
         return jax.tree.map(lambda x: lax.all_to_all(x, axis_name, 0, 0, tiled=True), tree)
@@ -158,12 +178,12 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
     # sender: nonce <- XOR my index; counter row <- destination row
     my_id = jnp.broadcast_to(idx, (r,))
     dest_rows = jnp.arange(r, dtype=jnp.uint32)
-    wires = _crypt_wires(wires, meta, secure, my_id, dest_rows)
+    wires = _crypt_wires(wires, meta, secure, my_id, dest_rows, round_index)
 
     wires = [lax.all_to_all(w, axis_name, 0, 0, tiled=True) for w in wires]
 
     # receiver: row s came from source s; at the source it sat at row my_idx
     src_ids = jnp.arange(r, dtype=jnp.uint32)
     my_rows = jnp.broadcast_to(idx, (r,))
-    wires = _crypt_wires(wires, meta, secure, src_ids, my_rows)
+    wires = _crypt_wires(wires, meta, secure, src_ids, my_rows, round_index)
     return _unpack_wire(wires, meta, treedef)

@@ -1,0 +1,139 @@
+"""TeraSort-style sampling sort on the iterative secure MapReduce driver.
+
+Classic MapReduce sort: pick R-1 splitters, range-partition every record to
+reducer i iff splitter[i-1] <= v < splitter[i], each reducer sorts its range
+locally; the concatenation of reducer outputs is globally sorted. The hard
+part is *choosing* the splitters — TeraSort samples the input first.
+
+Here the sampling pass and the sort pass are rounds of ONE fused
+`run_iterative_mapreduce` dispatch: every round range-partitions by the
+*current* splitter table (carried state), reducers sort what they received
+and count their load, and the reduce step refines the splitters toward
+equi-depth by inverting the piecewise-linear CDF observed on the round's
+bucket counts. Round 0 with uniform splitters is the "sampling" pass (skewed
+inputs may overflow per-destination capacity — the driver surfaces that as a
+per-round `n_dropped`); by the last round the splitters are balanced, drops
+hit zero, and the carried `sorted` buffer holds the answer. Shapes are fixed
+every round, so the whole job is a single `lax.scan` under shard_map.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.core.driver import IterativeSpec, run_iterative_mapreduce
+from repro.core.engine import identity_hash
+from repro.core.shuffle import SecureShuffleConfig
+
+
+def equidepth_edges(edges, counts):
+    """Refine bin edges toward equi-depth given observed per-bin counts.
+
+    Inverts the piecewise-linear CDF implied by (edges, counts) at the
+    equi-depth targets. Endpoints stay pinned; empty histograms return the
+    edges unchanged.
+    """
+    r = counts.shape[0]
+    total = jnp.sum(counts)
+    cum = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+    targets = total * jnp.arange(1, r, dtype=jnp.float32) / r
+    interior = jnp.interp(targets, cum.astype(jnp.float32), edges.astype(jnp.float32))
+    new = jnp.concatenate([edges[:1], interior, edges[-1:]])
+    return jnp.where(total > 0, new, edges)
+
+
+def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "data",
+                          n_rounds: int = 2) -> IterativeSpec:
+    """Driver spec for sampling sort over `n_shards` reducers.
+
+    State: {"edges": (R+1,) f32 range-partition edges,
+            "sorted": (R, R*capacity) f32 per-reducer sorted ranges
+                      (+inf padding past each reducer's count),
+            "counts": (R,) f32 per-reducer received counts}.
+    """
+
+    def map_fn(state, inputs, r):
+        v = inputs["v"]
+        # destination reducer by range partition on the current edges
+        bucket = jnp.clip(
+            jnp.searchsorted(state["edges"][1:-1], v, side="right"), 0, n_shards - 1
+        ).astype(jnp.int32)
+        return bucket, {"v": v}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        recv = jnp.where(valid, rv["v"], jnp.inf)
+        local_sorted = jnp.sort(recv)  # invalids sort last as +inf
+        local_count = jnp.sum(valid).astype(jnp.float32)
+
+        # client gather: every shard reassembles the full table (replication)
+        all_sorted = lax.all_gather(local_sorted, axis_name)
+        counts = lax.all_gather(local_count, axis_name)
+        new_state = {
+            "edges": equidepth_edges(state["edges"], counts),
+            "sorted": all_sorted,
+            "counts": counts,
+        }
+        return new_state, {"counts": counts}
+
+    return IterativeSpec(
+        map_fn=map_fn,
+        reduce_fn=reduce_fn,
+        hash_fn=identity_hash,  # key IS the destination reducer
+        capacity=capacity,
+        n_rounds=n_rounds,
+    )
+
+
+def sample_sort(
+    values,
+    mesh: Mesh,
+    *,
+    axis_name: str = "data",
+    secure: SecureShuffleConfig | None = None,
+    n_rounds: int = 2,
+    capacity: int | None = None,
+    lo: float | None = None,
+    hi: float | None = None,
+):
+    """Sort `values` (f32, sharded on the leading dim) via sampling sort.
+
+    Returns (sorted_values, counts (R,), dropped (n_rounds,)): row i of the
+    carried buffer holds reducer i's sorted range, so concatenating each
+    row's first counts[i] entries in row order — no global re-sort — yields
+    the sorted array (length n minus any final-round drops). `capacity` is
+    per-(source, destination) slots; defaults to the lossless worst case (a
+    whole source shard landing in one range).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    n = values.shape[0]
+    r = mesh.shape[axis_name]
+    n_loc = n // r
+    if capacity is None:
+        capacity = n_loc  # lossless even if a source sends everything one way
+    if lo is None:
+        lo = float(jnp.min(values))
+    if hi is None:
+        hi = float(jnp.max(values))
+    # open the top edge so hi itself stays in the last bucket
+    span = max(hi - lo, 1e-6)
+    edges = jnp.asarray(lo + span * jnp.arange(r + 1) / r, jnp.float32)
+    edges = edges.at[-1].set(hi + 1e-3 * span)
+
+    init_state = {
+        "edges": edges,
+        "sorted": jnp.full((r, r * capacity), jnp.inf, jnp.float32),
+        "counts": jnp.zeros((r,), jnp.float32),
+    }
+    spec = make_sample_sort_spec(r, capacity, axis_name=axis_name, n_rounds=n_rounds)
+    final, aux, dropped = run_iterative_mapreduce(
+        spec, {"v": values}, init_state, mesh, axis_name=axis_name, secure=secure
+    )
+
+    rows = np.asarray(final["sorted"])
+    counts = np.asarray(final["counts"])
+    out = np.concatenate([rows[i, : int(counts[i])] for i in range(r)])
+    return out, counts, dropped

@@ -15,6 +15,8 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.compat import make_mesh
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = 1
@@ -26,17 +28,14 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
         )
-    import numpy as np
-
-    dev_array = np.array(devices).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes)
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None):
     """Small mesh over whatever devices exist (tests / examples)."""
+    from repro.compat import make_mesh
+
     n = len(jax.devices())
     data = data or (n // model)
-    import numpy as np
-
-    dev = np.array(jax.devices()[: data * model]).reshape(data, model)
-    return jax.sharding.Mesh(dev, ("data", "model"))
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[: data * model])

@@ -1,0 +1,33 @@
+"""RFC 8439 ChaCha20 test vectors, shared by the crypto and kernel suites."""
+
+import numpy as np
+
+RFC_KEY = bytes(range(32))  # 00 01 02 ... 1f
+RFC_NONCE_232 = bytes.fromhex("000000090000004a00000000")
+# §2.3.2 expected output state (serialized keystream words)
+RFC_BLOCK_232 = np.array(
+    [
+        0xE4E7F110, 0x15593BD1, 0x1FDD0F50, 0xC47120A3,
+        0xC7F4D1C7, 0x0368C033, 0x9AAA2204, 0x4E6CD4C3,
+        0x466482D2, 0x09AA9F07, 0x05D7C214, 0xA2028BD9,
+        0xD19C12B5, 0xB94E16DE, 0xE883D0CB, 0x4E3C50A2,
+    ],
+    dtype=np.uint32,
+)
+
+# §2.4.2 full encryption test
+RFC_NONCE_242 = bytes.fromhex("000000000000004a00000000")
+RFC_PLAINTEXT = (
+    b"Ladies and Gentlemen of the class of '99: If I could offer you "
+    b"only one tip for the future, sunscreen would be it."
+)
+RFC_CIPHERTEXT = bytes.fromhex(
+    "6e2e359a2568f98041ba0728dd0d6981"
+    "e97e7aec1d4360c20a27afccfd9fae0b"
+    "f91b65c5524733ab8f593dabcd62b357"
+    "1639d624e65152ab8f530c359f0861d8"
+    "07ca0dbf500d6a6156a38e088a22b65e"
+    "52bc514d16ccf806818ce91ab7793736"
+    "5af90bbf74a35be6b40b8eedf2785e42"
+    "874d"
+)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointError, CheckpointManager
+from repro.compat import make_mesh
 
 
 def _tree(seed=0):
@@ -69,7 +70,7 @@ def test_elastic_restore_across_mesh_shapes(tmp_path):
 
     mgr = CheckpointManager(str(tmp_path))
     t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
-    mesh1 = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh1 = make_mesh((1,), ("data",))
     mgr.save(1, t)
     sh = {"w": NamedSharding(mesh1, P("data", None))}
     restored, _ = mgr.restore(1, t, shardings=sh)
@@ -88,7 +89,7 @@ def test_train_resume_bitexact(tmp_path):
     from repro.train.step import SecureIngest, make_train_step
 
     cfg = get_config("rwkv6-1.6b").reduced()
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     session = make_session_keys(b"\x21" * 32)
     ingest = SecureIngest(key_words=session.words("data"),
                           nonce_words=session.nonce_words("data", 0))

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.core.engine import MapReduceSpec, default_hash, identity_hash, run_mapreduce
 from repro.core.kmeans import generate_points, kmeans_fit, kmeans_step_ref, make_kmeans_step
 from repro.core.shuffle import SecureShuffleConfig, bucket_pack
@@ -17,7 +18,7 @@ from repro.crypto import chacha
 
 
 def _mesh1():
-    return jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), ("data",))
 
 
 def _secure_cfg():

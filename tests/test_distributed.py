@@ -1,26 +1,9 @@
 """Multi-device tests: run in subprocesses with 8 forced host devices
 (smoke tests keep seeing 1 device — per the dry-run contract)."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str, devices: int = 8, timeout: int = 420):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    p = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=timeout, env=env,
-    )
-    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-3000:]}"
-    return p.stdout
+from conftest import run_in_subprocess as _run
 
 
 def test_secure_mapreduce_8dev():
@@ -29,7 +12,8 @@ def test_secure_mapreduce_8dev():
     from repro.core.engine import MapReduceSpec, run_mapreduce, default_hash
     from repro.core.shuffle import SecureShuffleConfig
     from repro.crypto import chacha
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, 64, 1024, dtype=np.int32))
     vals = jnp.asarray(rng.normal(size=(1024,)).astype(np.float32))
@@ -54,7 +38,8 @@ def test_kmeans_multidev_matches_single():
     from repro.core.kmeans import generate_points, kmeans_step_ref, make_kmeans_step
     from repro.core.shuffle import SecureShuffleConfig
     from repro.crypto import chacha
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     pts, _ = generate_points(1024, 8, seed=1)
     cfg = SecureShuffleConfig(key_words=chacha.key_to_words(bytes(range(32))),
                               nonce_words=chacha.nonce_to_words(b"\\x02"*12))
@@ -74,7 +59,8 @@ def test_moe_shuffle_vs_dense_8dev():
     from dataclasses import replace
     from repro.configs import get_config
     from repro.models.moe import moe_init, moe_apply
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = replace(get_config("qwen2-moe-a2.7b").reduced(), capacity_factor=8.0)
     params = moe_init(jax.random.key(0), cfg, n_model=4)
     x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model), jnp.float32)
@@ -99,7 +85,8 @@ def test_secure_moe_encrypted_equals_plain_8dev():
     from repro.core.shuffle import SecureShuffleConfig
     from repro.crypto import chacha
     from repro.models.moe import moe_init, moe_apply
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = replace(get_config("granite-moe-3b-a800m").reduced(), capacity_factor=8.0)
     params = moe_init(jax.random.key(0), cfg, n_model=4)
     x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model), jnp.float32)
@@ -119,7 +106,8 @@ def test_train_step_sharded_2x4():
     import jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.train.step import init_train_state, make_train_step
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("glm4-9b").reduced()
     params, opt = init_train_state(cfg, mesh, jax.random.key(0))
     # warmup=1 so the very first step has a non-zero learning rate
@@ -141,7 +129,8 @@ def test_elastic_checkpoint_8_to_4(tmp_path):
     from repro.checkpoint.manager import CheckpointManager
     from repro.configs import get_config
     from repro.train.step import init_train_state
-    mesh8 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh
+    mesh8 = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("rwkv6-1.6b").reduced()
     params, _ = init_train_state(cfg, mesh8, jax.random.key(0))
     mgr = CheckpointManager({str(tmp_path)!r})

@@ -1,4 +1,10 @@
-"""Pallas chacha20 kernel vs pure-jnp oracle: shape/dtype sweeps."""
+"""Pallas chacha20 kernel vs pure-jnp oracle: shape/dtype sweeps.
+
+All cases run the kernel in interpret mode, so they pass on backends without
+a compiled Pallas lowering (CPU); if even the Pallas frontend or its
+GPU/Triton backend module is unimportable, the module skips cleanly instead
+of erroring at collection.
+"""
 
 import numpy as np
 import pytest
@@ -7,9 +13,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.crypto import chacha
-from repro.kernels.chacha20 import ops
-from repro.kernels.chacha20.kernel import chacha20_xor_blocks
-from repro.kernels.chacha20.ref import chacha20_xor_blocks_ref
+from rfc_vectors import RFC_BLOCK_232
+
+try:
+    from repro.kernels.chacha20 import ops
+    from repro.kernels.chacha20.kernel import chacha20_xor_blocks
+    from repro.kernels.chacha20.ref import chacha20_xor_blocks_ref
+except ImportError as e:  # e.g. no Triton/Mosaic backend for this platform
+    pytest.skip(f"Pallas chacha20 kernel unavailable: {e}", allow_module_level=True)
 
 KW = chacha.key_to_words(bytes(range(32)))
 NW = chacha.nonce_to_words(bytes.fromhex("000000000000004a00000000"))
@@ -30,8 +41,6 @@ def test_kernel_rfc_vector():
     state0 = ops.make_state0(KW, chacha.nonce_to_words(bytes.fromhex("000000090000004a00000000")), 1)
     zeros = jnp.zeros((8, 16), jnp.uint32)
     ks = chacha20_xor_blocks(zeros, state0, block_rows=8, interpret=True)
-    from tests.test_crypto import RFC_BLOCK_232
-
     np.testing.assert_array_equal(np.asarray(ks[0]), RFC_BLOCK_232)
 
 

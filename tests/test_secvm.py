@@ -6,6 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh
 from repro.core import secvm
 from repro.crypto import chacha
 
@@ -94,7 +95,7 @@ def test_vm_in_mapreduce_map_fn():
     """SecVM program as the map function of a secure MapReduce job."""
     from repro.core.engine import MapReduceSpec, identity_hash, run_mapreduce
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     prog = _poly_prog()
     code_ct, consts_ct = secvm.encrypt_program(prog, KW, NW, 0)
 
