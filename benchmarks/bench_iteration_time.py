@@ -13,6 +13,12 @@ The fused section runs the same converged k-means job twice:
                   `run_iterative_mapreduce` (`lax.scan` under shard_map).
 It reports us/iteration for both and the host round-trip counts; the fused
 driver must dispatch >= 2x fewer times per converged run.
+
+The final section sweeps the secure-shuffle keystream backends
+(`core/shuffle.py` impl selection) through the fused driver: compile time of
+the first dispatch and steady-state us/iteration for the Pallas rows kernel
+vs the vmapped jnp oracle, so the Pallas fast path's compile+runtime win is
+measured on the exact hot path the ROADMAP names.
 """
 
 from __future__ import annotations
@@ -110,4 +116,26 @@ def run():
         f"fused driver must cut host round-trips >=2x, got {ratio:.2f}x "
         f"({loop_iters} vs {res.n_dispatches})"
     )
+
+    # --- keystream impl sweep on the fused driver: compile + steady state ----
+    w = jnp.ones((n,), jnp.float32)
+    inputs = {"p": pts, "w": w}
+    c0 = pts[:k]
+    for impl in ("pallas", "jnp"):
+        runner, per_dispatch = make_kmeans_runner(
+            mesh, k, secure=_cfg(), rounds_per_dispatch=rounds, chacha_impl=impl)
+        t0 = time.perf_counter()
+        c, _, _ = runner(inputs, c0, 0)
+        jax.block_until_ready(c)
+        compile_s = time.perf_counter() - t0  # first dispatch: compile + run
+        c, _, _ = runner(inputs, c, per_dispatch)
+        jax.block_until_ready(c)
+        reps, offset = 3, 2 * per_dispatch
+        t0 = time.perf_counter()
+        for i in range(reps):
+            c, _, _ = runner(inputs, c, offset + i * per_dispatch)
+        jax.block_until_ready(c)
+        per_iter = (time.perf_counter() - t0) / (reps * per_dispatch)
+        rows.append((f"kmeans_fused_secure_{impl}", per_iter * 1e6,
+                     f"compile={compile_s:.1f}s"))
     return rows

@@ -10,6 +10,13 @@ Two measurements:
 
 Paper's claims to compare against: encryption ~5%, enclave ~30% within EPC,
 >200% once paging starts.
+
+Section (c) measures the two secure-shuffle keystream backends head to head
+(`core/shuffle.py` impl selection): XLA compile time of the first dispatch
+and steady-state time per iteration, for the Pallas rows kernel vs the
+vmapped jnp oracle. The jnp path's compile cost is the constant-folded
+20-round ChaCha the Pallas fast path exists to avoid — the win is measured
+here, not asserted.
 """
 
 from __future__ import annotations
@@ -87,4 +94,22 @@ def run():
     ovh = times["secure"] / times["plain"] - 1
     rows.append(("overhead_device_encryption", times["secure"] * 1e6,
                  f"{ovh * 100:.1f}%"))
+
+    # (c) keystream impl sweep: compile time + steady-state, pallas vs jnp
+    for impl in ("pallas", "jnp"):
+        step = make_kmeans_step(mesh, secure=sec, chacha_impl=impl)
+        c = pts2[:10]
+        t0 = time.perf_counter()
+        c, _ = step(pts2, w, c)
+        jax.block_until_ready(c)
+        compile_s = time.perf_counter() - t0  # first dispatch: compile + run
+        c, _ = step(pts2, w, c)  # committed-sharding recompile
+        jax.block_until_ready(c)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            c, _ = step(pts2, w, c)
+        jax.block_until_ready(c)
+        steady = (time.perf_counter() - t0) / 5
+        rows.append((f"secure_chacha_{impl}", steady * 1e6,
+                     f"compile={compile_s:.1f}s"))
     return rows

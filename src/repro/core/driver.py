@@ -141,8 +141,13 @@ def make_iterative_runner(
     mesh: Mesh,
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
+    chacha_impl: str | None = None,
 ):
     """Build the jitted fused-round function once; call it many times.
+
+    `chacha_impl` overrides the secure config's keystream backend
+    ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`) — baked
+    in at build time, since the impl choice is part of the traced program.
 
     Returns fn(inputs, state, round_offset=0) ->
     (final_state, aux_per_round, dropped_per_round) where aux leaves and
@@ -156,6 +161,8 @@ def make_iterative_runner(
     at 0 every chunk would reuse round-0's keystream across chunks (a
     two-time pad). It is a traced scalar: varying it never recompiles.
     """
+    if secure is not None:
+        secure = secure.with_impl(chacha_impl)
     n_shards = mesh.shape[axis_name]
     body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards,
                    secure=secure)
@@ -188,15 +195,17 @@ def run_iterative_mapreduce(
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
     round_offset: int = 0,
+    chacha_impl: str | None = None,
 ):
     """One-shot convenience: run `spec.n_rounds` fused rounds over
     `mesh[axis_name]`. `inputs` is a pytree sharded on the leading dim;
     `init_state` is replicated carried state. `round_offset`: see
     `make_iterative_runner` — pass the count of rounds already executed
-    when continuing a job across dispatches.
+    when continuing a job across dispatches. `chacha_impl` selects the
+    secure keystream backend (see `core/shuffle.py`).
 
     Returns (final_state, aux_per_round, dropped_per_round) — dropped has
     shape (n_rounds,) and must be all-zero for a lossless job.
     """
-    runner = make_iterative_runner(spec, mesh, axis_name, secure)
+    runner = make_iterative_runner(spec, mesh, axis_name, secure, chacha_impl=chacha_impl)
     return runner(inputs, init_state, round_offset)

@@ -86,13 +86,19 @@ def run_mapreduce(
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
     out_specs=P(),
+    chacha_impl: str | None = None,
 ):
     """Run the pipeline over `mesh[axis_name]`. Inputs are host-global arrays
     sharded on their leading dim; output spec defaults to replicated (the
     usual case: reduce_fn ends in a psum/all_gather).
 
+    `chacha_impl` overrides the secure config's keystream backend
+    ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`).
+
     Returns (output, n_dropped) — n_dropped must be 0 for a lossless job.
     """
+    if secure is not None:
+        secure = secure.with_impl(chacha_impl)
     n_shards = mesh.shape[axis_name]
     body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards, secure=secure)
     in_specs = (P(axis_name), compat.tree_map(lambda _: P(axis_name), values))

@@ -64,6 +64,7 @@ def grep_count(
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
     n_rounds: int = 4,
+    chacha_impl: str | None = None,
 ):
     """Count occurrences of each pattern token in `tokens` (int32, sharded).
 
@@ -71,7 +72,8 @@ def grep_count(
     successive fused rounds (the round index doubles as the stream cursor,
     so this job always starts at round_offset 0). Returns
     (counts (n_patterns,), per_round_hits (n_rounds, n_patterns),
-    dropped (n_rounds,)).
+    dropped (n_rounds,)). `chacha_impl` selects the secure keystream
+    backend (see `core/shuffle.py`).
     """
     tokens = jnp.asarray(tokens, jnp.int32)
     n = tokens.shape[0]
@@ -85,6 +87,7 @@ def grep_count(
     spec = make_grep_spec(patterns, chunk, axis_name=axis_name, n_rounds=n_rounds)
     init = jnp.zeros((patterns.shape[0],), jnp.float32)
     final, aux, dropped = run_iterative_mapreduce(
-        spec, {"t": tokens}, init, mesh, axis_name=axis_name, secure=secure
+        spec, {"t": tokens}, init, mesh, axis_name=axis_name, secure=secure,
+        chacha_impl=chacha_impl,
     )
     return final, aux["round_hits"], dropped

@@ -95,8 +95,14 @@ def _kmeans_shard_step(points, weights, centers, *, axis_name, n_shards, secure,
 
 
 def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleConfig | None = None,
-                     impl: str = "jnp"):
-    """Build the jitted one-iteration function over `mesh` (oracle path)."""
+                     impl: str = "jnp", chacha_impl: str | None = None):
+    """Build the jitted one-iteration function over `mesh` (oracle path).
+
+    `impl` selects the assignment kernel; `chacha_impl` the secure-shuffle
+    keystream backend (see `core/shuffle.py`).
+    """
+    if secure is not None:
+        secure = secure.with_impl(chacha_impl)
     n_shards = mesh.shape[axis_name]
     body = partial(
         _kmeans_shard_step,
@@ -143,16 +149,18 @@ def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
 
 def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
                        secure: SecureShuffleConfig | None = None, impl: str = "jnp",
-                       rounds_per_dispatch: int = 8):
+                       rounds_per_dispatch: int = 8, chacha_impl: str | None = None):
     """Prebuild the fused-round runner for `kmeans_fit` (shareable jit cache).
 
     Returns (runner, rounds_per_dispatch); pass the pair as `kmeans_fit`'s
     `runner=` to amortize the (expensive, secure-mode) XLA compile across
-    many fits with the same k/mesh/secure/impl.
+    many fits with the same k/mesh/secure/impl. `chacha_impl` selects the
+    secure keystream backend (see `core/shuffle.py`).
     """
     spec = make_kmeans_iterative_spec(k, mesh.shape[axis_name], impl=impl,
                                       n_rounds=rounds_per_dispatch, axis_name=axis_name)
-    return make_iterative_runner(spec, mesh, axis_name, secure), rounds_per_dispatch
+    return (make_iterative_runner(spec, mesh, axis_name, secure, chacha_impl=chacha_impl),
+            rounds_per_dispatch)
 
 
 def kmeans_fit(
@@ -170,6 +178,7 @@ def kmeans_fit(
     weights=None,
     rounds_per_dispatch: int = 8,
     runner=None,
+    chacha_impl: str | None = None,
 ) -> KMeansResult:
     """Iterate to convergence. threshold=None -> paper's diag/1000 rule.
 
@@ -184,7 +193,8 @@ def kmeans_fit(
     round_offset, keeping every secure round's keystream disjoint across
     dispatches. `runner`: a prebuilt `make_kmeans_runner(...)` result to
     reuse its jit cache across fits (must match k/mesh/secure/impl/
-    rounds_per_dispatch).
+    rounds_per_dispatch). `chacha_impl` selects the secure keystream backend
+    (see `core/shuffle.py`); ignored when `runner` is supplied.
     """
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -203,7 +213,7 @@ def kmeans_fit(
     if runner is None:
         runner, rounds = make_kmeans_runner(
             mesh, k, axis_name=axis_name, secure=secure, impl=impl,
-            rounds_per_dispatch=rounds,
+            rounds_per_dispatch=rounds, chacha_impl=chacha_impl,
         )
     else:
         runner, rounds = runner

@@ -24,10 +24,33 @@ rounds would be a classic two-time pad. XORing the (traced) round index into
 nonce word 1 gives every round a disjoint keystream while both endpoints of
 the collective can still derive it locally — the round counter is part of
 the shared loop state, never transmitted.
+
+Keystream implementation selection
+----------------------------------
+Two interchangeable backends compute the per-row keystream; the counter-space
+layout above is IDENTICAL under both, so they are bit-exact by construction
+(and proven so by `tests/test_shuffle_impls.py`):
+
+  * ``pallas`` (default) — `repro.kernels.chacha20.chacha20_xor_rows`: the
+    whole (R, n_words) wire buffer in one Pallas launch gridded over
+    rows × block tiles. Interpret mode off-TPU keeps XLA from constant-
+    folding the 20-round ARX chain, which is what made secure-mode compiles
+    take ~40-110s per config on the historical path.
+  * ``jnp`` — the vmapped pure-jnp ChaCha, kept as the differential-testing
+    oracle.
+
+Selection: `SecureShuffleConfig.impl` ('auto' | 'pallas' |
+'pallas-interpret' | 'jnp'). 'auto' resolves to the `REPRO_CHACHA_IMPL`
+environment variable when set, else 'pallas'; an explicit non-'auto' value
+always wins over the environment. The choice is read at trace time — an env
+flip after a runner is jitted does not retrace it. If the Pallas frontend is
+unimportable on this platform, 'auto'/'pallas' silently fall back to 'jnp'
+(same bits, slower compile).
 """
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Any
 
@@ -39,14 +62,58 @@ from repro.crypto import ctr as _ctr
 from repro.crypto.chacha import chacha20_keystream_words
 from repro.crypto.ctr import words_for
 
+try:  # the Pallas frontend may be absent on exotic platforms
+    from repro.kernels.chacha20.ops import chacha20_xor_rows, make_state0
+
+    _HAVE_PALLAS = True
+except ImportError:  # pragma: no cover - exercised only without Pallas
+    chacha20_xor_rows = make_state0 = None
+    _HAVE_PALLAS = False
+
+CHACHA_IMPL_ENV = "REPRO_CHACHA_IMPL"
+_VALID_IMPLS = ("auto", "pallas", "pallas-interpret", "jnp")
+
+
+def resolve_chacha_impl(impl: str = "auto") -> tuple[str, bool]:
+    """Resolve an impl selector to concrete (impl, interpret) kernel args.
+
+    'auto' defers to $REPRO_CHACHA_IMPL (default 'pallas'); explicit values
+    win over the environment. 'pallas-interpret' forces interpret mode even
+    on a backend with a compiled Pallas lowering; plain 'pallas' interprets
+    only off-TPU. Falls back to 'jnp' when Pallas is unimportable.
+    """
+    if impl in (None, "auto"):
+        impl = os.environ.get(CHACHA_IMPL_ENV, "pallas")
+    if impl not in _VALID_IMPLS or impl == "auto":
+        raise ValueError(
+            f"chacha impl must be one of {_VALID_IMPLS[1:]}, got {impl!r}")
+    if impl == "jnp" or not _HAVE_PALLAS:
+        return "jnp", True
+    if impl == "pallas-interpret":
+        return "pallas", True
+    return "pallas", jax.default_backend() != "tpu"
+
 
 @dataclass(frozen=True)
 class SecureShuffleConfig:
-    """Session material for encrypting shuffle traffic (paper: k_shuffle)."""
+    """Session material for encrypting shuffle traffic (paper: k_shuffle).
+
+    `impl` picks the keystream backend (module docstring): 'auto' (env-
+    overridable, default 'pallas'), 'pallas', 'pallas-interpret', or 'jnp'.
+    """
 
     key_words: Any  # (8,) u32
     nonce_words: Any  # (3,) u32 base nonce; word 0 is XORed with source index
     counter0: int = 0
+    impl: str = "auto"
+
+    def with_impl(self, impl: str | None) -> "SecureShuffleConfig":
+        """Copy with a different keystream impl (None keeps the current one)."""
+        if impl is None or impl == self.impl:
+            return self
+        from dataclasses import replace
+
+        return replace(self, impl=impl)
 
 
 def bucket_pack(keys, bucket, values, n_buckets: int, capacity: int,
@@ -100,25 +167,54 @@ def _row_blocks(leaf_row_shape, dtype) -> int:
     return -(-words_for(leaf_row_shape, dtype) // 16)
 
 
+def _round_nonce(cfg: SecureShuffleConfig, round_id):
+    """Base nonce for this round: word 1 ^= round index (may be traced)."""
+    base_nonce = jnp.asarray(cfg.nonce_words, jnp.uint32)
+    if round_id is not None:
+        r = jnp.asarray(round_id, jnp.uint32)
+        base_nonce = base_nonce.at[1].set(base_nonce[1] ^ r)
+    return base_nonce
+
+
+def _crypt_rows(cfg: SecureShuffleConfig, words, nonce_ids, ctr_starts, round_id):
+    """XOR an (R, n_words) wire buffer with the per-row keystream.
+
+    Row i uses nonce word 0 XOR nonce_ids[i] and absolute block counter start
+    ctr_starts[i]; nonce word 1 carries the round index. Dispatches to the
+    backend selected by `cfg.impl` via `repro.kernels.chacha20`; when the
+    Pallas frontend is unimportable, a local vmapped jnp path (bit-identical
+    by construction) keeps secure mode working.
+    """
+    nonce_ids = jnp.asarray(nonce_ids, jnp.uint32)
+    ctr_starts = jnp.asarray(ctr_starts, jnp.uint32)
+    base_nonce = _round_nonce(cfg, round_id)
+    if _HAVE_PALLAS:
+        impl, interpret = resolve_chacha_impl(cfg.impl)
+        state0 = make_state0(cfg.key_words, base_nonce, 0)
+        return chacha20_xor_rows(words, state0, nonce_ids, ctr_starts,
+                                 impl=impl, interpret=interpret)
+
+    n_words = words.shape[1]  # pragma: no cover - exercised only without Pallas
+
+    def one(row, nid, ctr0):
+        nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
+        return row ^ chacha20_keystream_words(cfg.key_words, nonce, ctr0, n_words)
+
+    return jax.vmap(one)(words, nonce_ids, ctr_starts)
+
+
 def _keystream_rows(cfg: SecureShuffleConfig, nonce_ids, ctr_rows, offset, blocks, n_words,
                     round_id=None):
     """Per-row keystream: row i uses nonce^nonce_ids[i], ctr offset+ctr_rows[i]·blocks.
 
     `round_id` (scalar u32, may be traced) is XORed into nonce word 1 so every
-    round of an iterative job draws from a disjoint keystream.
+    round of an iterative job draws from a disjoint keystream. Routed through
+    the impl selected by `cfg.impl` (keystream = XOR with zeros).
     """
-    base_nonce = jnp.asarray(cfg.nonce_words, jnp.uint32)
-    if round_id is not None:
-        r = jnp.asarray(round_id, jnp.uint32)
-        base_nonce = base_nonce.at[1].set(base_nonce[1] ^ r)
-
-    def one(nid, crow):
-        nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
-        return chacha20_keystream_words(
-            cfg.key_words, nonce, offset + crow * jnp.uint32(blocks), n_words
-        )
-
-    return jax.vmap(one)(nonce_ids, ctr_rows)
+    nonce_ids = jnp.asarray(nonce_ids, jnp.uint32)
+    ctr_starts = jnp.uint32(offset) + jnp.asarray(ctr_rows, jnp.uint32) * jnp.uint32(blocks)
+    zeros = jnp.zeros((nonce_ids.shape[0], n_words), jnp.uint32)
+    return _crypt_rows(cfg, zeros, nonce_ids, ctr_starts, round_id)
 
 
 def _pack_wire(tree):
@@ -148,14 +244,53 @@ def _unpack_wire(wires, meta, treedef):
 
 def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows, round_id=None):
     out = []
+    ctr_rows = jnp.asarray(ctr_rows, jnp.uint32)
     offset = jnp.uint32(cfg.counter0)
     for words, (shape, dtype, _pad) in zip(wires, meta):
         r, n_words = words.shape
         blocks = _row_blocks(shape[1:], dtype)
-        ks = _keystream_rows(cfg, nonce_ids, ctr_rows, offset, blocks, n_words, round_id)
-        out.append(words ^ ks)
+        ctr_starts = offset + ctr_rows * jnp.uint32(blocks)
+        out.append(_crypt_rows(cfg, words, nonce_ids, ctr_starts, round_id))
         offset = offset + jnp.uint32(blocks * r)
     return out
+
+
+class _WireAccounting:
+    """Trace-time shuffle byte counter (see `record_wire_bytes`)."""
+
+    def __init__(self):
+        self.enabled = False
+        self.records: list[dict] = []
+
+    def note(self, *, secure: bool, nbytes: int, n_leaves: int):
+        if self.enabled:
+            self.records.append(
+                {"secure": secure, "bytes": nbytes, "leaves": n_leaves})
+
+
+wire_accounting = _WireAccounting()
+
+
+class record_wire_bytes:
+    """Context manager: record per-shuffle wire bytes at TRACE time.
+
+    Every `keyed_all_to_all` traced inside the block appends one record with
+    the exact byte count that crosses the inter-chip link per shard — raw
+    leaf bytes in plaintext mode, packed u32 wire words in secure mode.
+    Shapes are static, so trace-time accounting is exact; a shuffle inside
+    `lax.scan` (the iterative driver) traces once and records ONE round's
+    bytes. Used by `benchmarks/bench_data_volume.py` to prove CTR ciphertext
+    expansion is zero.
+    """
+
+    def __enter__(self):
+        wire_accounting.enabled = True
+        wire_accounting.records = []
+        return wire_accounting.records
+
+    def __exit__(self, *exc):
+        wire_accounting.enabled = False
+        return False
 
 
 def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = None,
@@ -169,11 +304,22 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
     equivalent to round 0.
     """
     if secure is None:
+        leaves = jax.tree.leaves(tree)
+        wire_accounting.note(
+            secure=False,
+            nbytes=sum(l.size * l.dtype.itemsize for l in leaves),
+            n_leaves=len(leaves),
+        )
         return jax.tree.map(lambda x: lax.all_to_all(x, axis_name, 0, 0, tiled=True), tree)
 
     r = jax.tree.leaves(tree)[0].shape[0]
     idx = lax.axis_index(axis_name).astype(jnp.uint32)
     wires, meta, treedef = _pack_wire(tree)
+    wire_accounting.note(
+        secure=True,
+        nbytes=sum(w.size * 4 for w in wires),
+        n_leaves=len(wires),
+    )
 
     # sender: nonce <- XOR my index; counter row <- destination row
     my_id = jnp.broadcast_to(idx, (r,))

@@ -98,6 +98,7 @@ def sample_sort(
     capacity: int | None = None,
     lo: float | None = None,
     hi: float | None = None,
+    chacha_impl: str | None = None,
 ):
     """Sort `values` (f32, sharded on the leading dim) via sampling sort.
 
@@ -106,7 +107,8 @@ def sample_sort(
     row's first counts[i] entries in row order — no global re-sort — yields
     the sorted array (length n minus any final-round drops). `capacity` is
     per-(source, destination) slots; defaults to the lossless worst case (a
-    whole source shard landing in one range).
+    whole source shard landing in one range). `chacha_impl` selects the
+    secure keystream backend (see `core/shuffle.py`).
     """
     values = jnp.asarray(values, jnp.float32)
     n = values.shape[0]
@@ -130,7 +132,8 @@ def sample_sort(
     }
     spec = make_sample_sort_spec(r, capacity, axis_name=axis_name, n_rounds=n_rounds)
     final, aux, dropped = run_iterative_mapreduce(
-        spec, {"v": values}, init_state, mesh, axis_name=axis_name, secure=secure
+        spec, {"v": values}, init_state, mesh, axis_name=axis_name, secure=secure,
+        chacha_impl=chacha_impl,
     )
 
     rows = np.asarray(final["sorted"])

@@ -30,20 +30,14 @@ from repro.crypto.chacha import CONSTANT_WORDS, _QR_SCHEDULE
 DEFAULT_BLOCK_ROWS = 2048
 
 
-def _chacha20_tile_kernel(state0_ref, x_ref, y_ref, *, block_rows: int):
-    pid = pl.program_id(0)
-    s0 = state0_ref[...]  # (16,) u32 template: const | key | counter0 | nonce
+def _keystream_tile(init):
+    """20 unrolled ARX rounds + feed-forward over 16 (B, 1) state vectors.
 
-    # Per-row block counters for this tile.
-    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1), 0)
-    ctr = s0[12] + jnp.uint32(block_rows) * pid.astype(jnp.uint32) + row
-
-    init = []
-    for i in range(16):
-        if i == 12:
-            init.append(ctr)
-        else:
-            init.append(jnp.broadcast_to(s0[i], (block_rows, 1)))
+    The shared cryptographic core of both tile kernels: any change here (or
+    a future TPU re-tiling) applies to the single-stream and the batched
+    rows kernel alike, so their keystreams cannot diverge. Returns the
+    (B, 16) keystream tile.
+    """
 
     def rotl(v, n):
         return (v << n) | (v >> (32 - n))
@@ -62,8 +56,25 @@ def _chacha20_tile_kernel(state0_ref, x_ref, y_ref, *, block_rows: int):
             xb = rotl(xb ^ xc, 7)
             xs[a], xs[b], xs[c], xs[d] = xa, xb, xc, xd
 
-    ks = jnp.concatenate([x + x0 for x, x0 in zip(xs, init)], axis=1)  # (B, 16)
-    y_ref[...] = x_ref[...] ^ ks
+    return jnp.concatenate([x + x0 for x, x0 in zip(xs, init)], axis=1)
+
+
+def _chacha20_tile_kernel(state0_ref, x_ref, y_ref, *, block_rows: int):
+    pid = pl.program_id(0)
+    s0 = state0_ref[...]  # (16,) u32 template: const | key | counter0 | nonce
+
+    # Per-row block counters for this tile.
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1), 0)
+    ctr = s0[12] + jnp.uint32(block_rows) * pid.astype(jnp.uint32) + row
+
+    init = []
+    for i in range(16):
+        if i == 12:
+            init.append(ctr)
+        else:
+            init.append(jnp.broadcast_to(s0[i], (block_rows, 1)))
+
+    y_ref[...] = x_ref[...] ^ _keystream_tile(init)
 
 
 def chacha20_xor_blocks(
@@ -94,3 +105,72 @@ def chacha20_xor_blocks(
         out_shape=jax.ShapeDtypeStruct((n_blocks, 16), jnp.uint32),
         interpret=interpret,
     )(state0, x_blocks)
+
+
+def _chacha20_rows_tile_kernel(state0_ref, nid_ref, ctr_ref, x_ref, y_ref, *,
+                               block_rows: int):
+    """One (row, block-tile) program of the batched multi-row stream.
+
+    The grid is (n_rows, n_block_tiles): program (i, j) encrypts blocks
+    [j*block_rows, (j+1)*block_rows) of wire row i. The row's nonce is the
+    template nonce with word 0 XOR nid_ref[0]; its block counters start at
+    ctr_ref[0] (absolute — state0 word 12 is ignored). The ARX core is the
+    shared `_keystream_tile`.
+    """
+    tile = pl.program_id(1)
+    s0 = state0_ref[...]  # (16,) u32 template: const | key | (ignored) | nonce
+    nid = nid_ref[0]
+    ctr0 = ctr_ref[0]
+
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1), 0)
+    ctr = ctr0 + jnp.uint32(block_rows) * tile.astype(jnp.uint32) + row
+    nonce0 = s0[13] ^ nid
+
+    init = []
+    for i in range(16):
+        if i == 12:
+            init.append(ctr)
+        elif i == 13:
+            init.append(jnp.broadcast_to(nonce0, (block_rows, 1)))
+        else:
+            init.append(jnp.broadcast_to(s0[i], (block_rows, 1)))
+
+    y_ref[...] = x_ref[...] ^ _keystream_tile(init)[None]
+
+
+def chacha20_xor_row_blocks(
+    x_rows: jax.Array,
+    state0: jax.Array,
+    nonce_ids: jax.Array,
+    ctr_starts: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """XOR an (n_rows, n_blocks, 16) u32 buffer with per-row keystreams.
+
+    One launch covers the whole buffer with a (rows × block-tiles) grid —
+    this is the secure-shuffle fast path, replacing R vmapped single-row
+    keystream expansions. Row i, block j draws keystream from
+      nonce  = state0 nonce with word 0 XOR nonce_ids[i]
+      counter = ctr_starts[i] + j       (absolute; state0[12] is ignored)
+    n_blocks must be a multiple of block_rows (ops.py pads).
+    """
+    n_rows, n_blocks, w = x_rows.shape
+    assert w == 16 and x_rows.dtype == jnp.uint32
+    assert n_blocks % block_rows == 0, (n_blocks, block_rows)
+    assert nonce_ids.shape == (n_rows,) and ctr_starts.shape == (n_rows,)
+    grid = (n_rows, n_blocks // block_rows)
+    return pl.pallas_call(
+        functools.partial(_chacha20_rows_tile_kernel, block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((16,), lambda i, j: (0,)),  # template state, replicated
+            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row nonce XOR id
+            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row counter start
+            pl.BlockSpec((1, block_rows, 16), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, 16), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_blocks, 16), jnp.uint32),
+        interpret=interpret,
+    )(state0, nonce_ids, ctr_starts, x_rows)

@@ -13,7 +13,11 @@ import jax.numpy as jnp
 from repro.crypto import ctr as _ctr
 from repro.crypto.chacha import CONSTANT_WORDS
 from repro.kernels.chacha20 import ref as _ref
-from repro.kernels.chacha20.kernel import DEFAULT_BLOCK_ROWS, chacha20_xor_blocks
+from repro.kernels.chacha20.kernel import (
+    DEFAULT_BLOCK_ROWS,
+    chacha20_xor_blocks,
+    chacha20_xor_row_blocks,
+)
 
 
 def make_state0(key_words, nonce_words, counter0) -> jax.Array:
@@ -51,6 +55,52 @@ def chacha20_xor_words(
     x = jnp.concatenate([words, jnp.zeros((total - n,), jnp.uint32)]).reshape(-1, 16)
     y = chacha20_xor_blocks(x, state0, block_rows=rows, interpret=interpret)
     return y.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_rows", "interpret"))
+def chacha20_xor_rows(
+    words: jax.Array,
+    state0: jax.Array,
+    nonce_ids: jax.Array,
+    ctr_starts: jax.Array,
+    *,
+    impl: str = "pallas",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """XOR an (R, n_words) u32 wire buffer with per-row keystreams.
+
+    Row i uses nonce = state0 nonce with word 0 XOR nonce_ids[i] and block
+    counters starting at ctr_starts[i] (absolute — state0 word 12 is
+    ignored). This is the secure-shuffle entry point: 'pallas' covers the
+    whole buffer in ONE launch gridded over rows × block tiles; 'jnp' is the
+    bit-exact vmapped oracle kept for differential testing.
+    """
+    r, n = words.shape
+    nonce_ids = jnp.asarray(nonce_ids, jnp.uint32)
+    ctr_starts = jnp.asarray(ctr_starts, jnp.uint32)
+    n_blocks = -(-n // 16)
+    if impl == "jnp" or n_blocks == 0 or r == 0:
+        from repro.crypto.chacha import chacha20_keystream_words
+
+        def one(row_words, nid, ctr0):
+            nonce = state0[13:16].at[0].set(state0[13] ^ nid)
+            return row_words ^ chacha20_keystream_words(state0[4:12], nonce, ctr0, n)
+
+        return jax.vmap(one)(words, nonce_ids, ctr_starts)
+    rows = block_rows
+    if n_blocks < rows:
+        # Small rows (the common shuffle case): one tile per row, >= 8 blocks.
+        rows = max(8, 1 << (n_blocks - 1).bit_length())
+    pad_blocks = (-n_blocks) % rows
+    total = (n_blocks + pad_blocks) * 16
+    x = jnp.concatenate(
+        [words, jnp.zeros((r, total - n), jnp.uint32)], axis=1
+    ).reshape(r, -1, 16)
+    y = chacha20_xor_row_blocks(
+        x, state0, nonce_ids, ctr_starts, block_rows=rows, interpret=interpret
+    )
+    return y.reshape(r, -1)[:, :n]
 
 
 def ctr_crypt_array(

@@ -16,3 +16,19 @@ def chacha20_xor_blocks_ref(x_blocks: jax.Array, state0: jax.Array) -> jax.Array
     counters = state0[12] + jnp.arange(n, dtype=jnp.uint32)
     ks = chacha20_block_words(key_words, counters, nonce_words)
     return x_blocks ^ ks
+
+
+def chacha20_xor_row_blocks_ref(x_rows, state0, nonce_ids, ctr_starts):
+    """Reference for the batched rows kernel: (R, n_blocks, 16) u32 buffer,
+    row i using nonce word 0 XOR nonce_ids[i] and absolute counter start
+    ctr_starts[i] (state0 word 12 ignored)."""
+    n_blocks = x_rows.shape[1]
+    key_words = state0[4:12]
+
+    def one(row, nid, ctr0):
+        nonce = state0[13:16].at[0].set(state0[13] ^ nid)
+        counters = ctr0 + jnp.arange(n_blocks, dtype=jnp.uint32)
+        return row ^ chacha20_block_words(key_words, counters, nonce)
+
+    return jax.vmap(one)(x_rows, jnp.asarray(nonce_ids, jnp.uint32),
+                         jnp.asarray(ctr_starts, jnp.uint32))

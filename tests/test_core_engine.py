@@ -66,6 +66,69 @@ def test_bucket_pack_overflow_counted():
     assert int((np.asarray(bk)[0] >= 0).sum()) == 4
 
 
+def test_bucket_pack_all_invalid():
+    """Every key negative (padding): empty buffer, nothing dropped, and all
+    positions map to the R*C drop sentinel."""
+    keys = jnp.full((6,), -1, jnp.int32)
+    bk, bv, dropped, pos = bucket_pack(
+        keys, jnp.zeros((6,), jnp.int32), jnp.arange(6, dtype=jnp.float32), 3, 2,
+        return_positions=True,
+    )
+    assert int(dropped) == 0
+    np.testing.assert_array_equal(np.asarray(bk), np.full((3, 2), -1, np.int32))
+    np.testing.assert_array_equal(np.asarray(bv), np.zeros((3, 2), np.float32))
+    np.testing.assert_array_equal(np.asarray(pos), np.full((6,), 3 * 2, np.int32))
+
+
+def test_bucket_pack_exact_capacity_fill():
+    """Each bucket receives exactly `capacity` items: every slot filled,
+    zero drops — the boundary between lossless and overflow."""
+    r, cap = 3, 4
+    keys = jnp.arange(r * cap, dtype=jnp.int32)
+    bucket = keys % r
+    bk, bv, dropped = bucket_pack(keys, bucket, keys.astype(jnp.float32), r, cap)
+    assert int(dropped) == 0
+    bk = np.asarray(bk)
+    assert (bk >= 0).all()  # no empty slot anywhere
+    for row in range(r):
+        np.testing.assert_array_equal(np.sort(bk[row]) % r, np.full(cap, row))
+
+
+def test_bucket_pack_return_positions_under_overflow():
+    """positions is the exact inverse map for surviving items; dropped and
+    invalid items both map to the R*C sentinel."""
+    r, cap = 2, 3
+    #            kept x3 (bucket 0)   dropped   invalid   kept (bucket 1)
+    keys = jnp.asarray([10, 11, 12, 13, 14, -1, 20], jnp.int32)
+    bucket = jnp.asarray([0, 0, 0, 0, 0, 0, 1], jnp.int32)
+    vals = jnp.arange(7, dtype=jnp.float32)
+    bk, bv, dropped, pos = bucket_pack(keys, bucket, vals, r, cap,
+                                       return_positions=True)
+    assert int(dropped) == 2  # items 13, 14 overflow bucket 0
+    pos = np.asarray(pos)
+    sentinel = r * cap
+    np.testing.assert_array_equal(pos, np.array([0, 1, 2, sentinel, sentinel,
+                                                 sentinel, cap], np.int32))
+    flat_k = np.asarray(bk).reshape(-1)
+    flat_v = np.asarray(bv).reshape(-1)
+    for i in range(7):
+        if pos[i] < sentinel:  # inverse property: slot holds exactly this item
+            assert flat_k[pos[i]] == int(keys[i])
+            assert flat_v[pos[i]] == float(vals[i])
+
+
+def test_bucket_pack_intra_bucket_order_stable():
+    """Items of one bucket keep their input order in the packed row (the
+    stable-argsort contract combiners and MoE-style positions rely on)."""
+    keys = jnp.asarray([5, 3, 8, 6, 4, 7], jnp.int32)
+    bucket = jnp.asarray([1, 0, 1, 0, 1, 0], jnp.int32)
+    bk, _, dropped = bucket_pack(keys, bucket, jnp.zeros((6,)), 2, 4)
+    assert int(dropped) == 0
+    bk = np.asarray(bk)
+    np.testing.assert_array_equal(bk[0], np.array([3, 6, 7, -1], np.int32))
+    np.testing.assert_array_equal(bk[1], np.array([5, 8, 4, -1], np.int32))
+
+
 # --- wordcount ---------------------------------------------------------------
 
 
@@ -106,6 +169,7 @@ def test_kmeans_converges_and_recovers_centers():
     assert res.center_shift[-1] < res.center_shift[0]
 
 
+@pytest.mark.slow
 def test_kmeans_secure_equals_plain():
     pts, _ = generate_points(1024, 6, seed=5)
     r_plain = kmeans_fit(pts, 6, _mesh1(), max_iter=20)

@@ -97,7 +97,9 @@ def test_round_offset_threads_global_round_index():
 # --- fused rounds vs per-round loop ------------------------------------------
 
 
-@pytest.mark.parametrize("secure", [False, True])
+@pytest.mark.parametrize(
+    "secure", [False, pytest.param(True, marks=pytest.mark.slow)]
+)
 def test_multiround_kmeans_bitexact_vs_loop(secure):
     """N fused driver rounds == N per-round dispatches, bit-for-bit."""
     mesh = _mesh1()
@@ -202,6 +204,7 @@ def test_sampling_sort_8dev_refines_and_sorts():
     """)
 
 
+@pytest.mark.slow
 def test_driver_secure_equals_plain_2rounds_8dev():
     """>=2 encrypted rounds on 8 forced host devices == plaintext, exactly."""
     _run("""

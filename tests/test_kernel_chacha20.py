@@ -17,8 +17,8 @@ from rfc_vectors import RFC_BLOCK_232
 
 try:
     from repro.kernels.chacha20 import ops
-    from repro.kernels.chacha20.kernel import chacha20_xor_blocks
-    from repro.kernels.chacha20.ref import chacha20_xor_blocks_ref
+    from repro.kernels.chacha20.kernel import chacha20_xor_blocks, chacha20_xor_row_blocks
+    from repro.kernels.chacha20.ref import chacha20_xor_blocks_ref, chacha20_xor_row_blocks_ref
 except ImportError as e:  # e.g. no Triton/Mosaic backend for this platform
     pytest.skip(f"Pallas chacha20 kernel unavailable: {e}", allow_module_level=True)
 
@@ -33,6 +33,20 @@ def test_kernel_matches_ref_blocks(n_blocks, block_rows):
     state0 = ops.make_state0(KW, NW, 5)
     got = chacha20_xor_blocks(x, state0, block_rows=block_rows, interpret=True)
     want = chacha20_xor_blocks_ref(x, state0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_rows,n_blocks,block_rows", [(3, 8, 8), (5, 32, 16), (1, 16, 8)])
+def test_rows_kernel_matches_ref(n_rows, n_blocks, block_rows):
+    """Batched multi-row kernel (grid rows x tiles) vs the vmapped oracle."""
+    rng = np.random.default_rng(n_rows * 100 + n_blocks)
+    x = jnp.asarray(rng.integers(0, 2**32, size=(n_rows, n_blocks, 16), dtype=np.uint32))
+    nonce_ids = jnp.asarray(rng.integers(0, 2**32, size=(n_rows,), dtype=np.uint32))
+    ctr_starts = jnp.asarray(rng.integers(0, 2**32, size=(n_rows,), dtype=np.uint32))
+    state0 = ops.make_state0(KW, NW, 0)
+    got = chacha20_xor_row_blocks(x, state0, nonce_ids, ctr_starts,
+                                  block_rows=block_rows, interpret=True)
+    want = chacha20_xor_row_blocks_ref(x, state0, nonce_ids, ctr_starts)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
