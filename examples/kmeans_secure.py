@@ -32,7 +32,9 @@ def main():
     )
     res = kmeans_fit(pts, 10, mesh, secure=secure, init="farthest")
     print(f"diag/1000 threshold: converged in {res.n_iter} iterations "
-          f"({res.n_dispatches} fused host dispatches via the iterative driver), "
+          f"({res.n_dispatches} fused host dispatches via the convergence-aware "
+          f"driver; {res.n_rounds_dispatched} rounds dispatched, halt_fn masked "
+          f"{res.n_rounds_dispatched - res.n_iter} post-convergence rounds on device), "
           f"final shift {res.center_shift[-1]:.2e}, inertia {res.inertia:.1f}")
     d = np.linalg.norm(np.asarray(res.centers)[:, None] - true_centers[None], axis=-1)
     print(f"max distance to a true center: {d.min(axis=0).max():.4f}")

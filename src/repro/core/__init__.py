@@ -6,7 +6,10 @@ Two execution levels implement the same model:
     ChaCha20-encrypted before leaving the chip ("enclave") in secure mode.
     `driver.py` fuses N such rounds (iterative jobs: k-means, sampling sort,
     streaming grep) into one dispatch via `lax.scan`, with a per-round
-    keystream guaranteed by the round-index nonce layout in `shuffle.py`.
+    keystream guaranteed by the round-index nonce layout in `shuffle.py`;
+    its `run_until` adds convergence-aware termination — an on-device
+    `halt_fn` masks post-convergence rounds into no-ops (no shuffle, no
+    keystream) while the host grows dispatch chunks adaptively.
   * cluster level (`repro.runtime`): the paper's pub/sub-coordinated client/
     worker protocol over encrypted splits, with fault tolerance.
 
@@ -17,14 +20,32 @@ Plus the two SGX-specific mechanisms, adapted:
     budget; evict=>encrypt+MAC, fetch=>decrypt+verify+freshness).
 """
 
-from repro.core.driver import IterativeSpec, make_iterative_runner, run_iterative_mapreduce
-from repro.core.engine import MapReduceSpec, SecureShuffleConfig, run_mapreduce
+from repro.core.driver import (
+    DEFAULT_HALT_LOOP,
+    HALT_LOOP_IMPLS,
+    IterativeSpec,
+    RunUntilResult,
+    make_iterative_runner,
+    run_iterative_mapreduce,
+    run_until,
+)
+from repro.core.engine import (
+    MapReduceSpec,
+    SecureShuffleConfig,
+    run_mapreduce,
+    run_mapreduce_until,
+)
 
 __all__ = [
+    "DEFAULT_HALT_LOOP",
+    "HALT_LOOP_IMPLS",
     "IterativeSpec",
     "MapReduceSpec",
+    "RunUntilResult",
     "SecureShuffleConfig",
     "make_iterative_runner",
     "run_iterative_mapreduce",
     "run_mapreduce",
+    "run_mapreduce_until",
+    "run_until",
 ]

@@ -30,6 +30,54 @@ Per-round aux (stacked over rounds) and per-round overflow counts
 be judged — and a mid-chunk convergence point recovered from aux — without
 re-entering the device loop.
 
+Termination
+-----------
+Fixed `n_rounds` is the wrong contract for convergence-driven jobs: after
+the centroids stop moving, every remaining round in the chunk still pays the
+full map → bucket_pack → encrypt → all_to_all → decrypt → reduce pipeline.
+`IterativeSpec.halt_fn(state, aux, round_index) -> bool` moves the
+termination decision on-device, and `run_until` stops paying for
+post-convergence rounds at two levels:
+
+  * ON-DEVICE the round loop is halt-aware. `halt_fn` is evaluated right
+    after each round's reduce, on the freshly reduced (replicated) state and
+    that round's aux; once it returns True the remaining rounds of the chunk
+    become no-ops. Two interchangeable loop shapes implement this (select
+    with `loop_impl`, default `DEFAULT_HALT_LOOP` = 'while'):
+      - 'while'      — a `lax.while_loop` whose predicate is
+        `~halted & (i < n_rounds)`, writing aux into preallocated buffers;
+      - 'masked_scan' — the fixed-length `lax.scan` is kept, but a
+        `lax.cond` gates the whole round body into a cheap passthrough
+        (state unchanged, zero aux, no shuffle) once halted.
+    Both return `(state, aux, dropped, rounds_executed, halted)` and are
+    bit-identical; `benchmarks/bench_iteration_time.py` measures both (the
+    while loop compiles ~2x faster and skips the masked tail entirely,
+    hence the default; see the note at `DEFAULT_HALT_LOOP`).
+
+    REPLICATED-HALT CONTRACT: `halt_fn` must be a pure function of
+    replicated values (the carried state — which `reduce_fn` must replicate
+    before returning — the aux derived from it, and the round index). All
+    shards then compute the same predicate by construction, so the
+    collectives inside `lax.cond` / `lax.while_loop` branch uniformly
+    across the mesh. A halt decision derived from shard-local data is a
+    deadlock (shards disagree about whether the all_to_all happens).
+
+  * KEYSTREAM ACCOUNTING FOR HALTED ROUNDS: a halted round consumes NO
+    keystream — the passthrough branch performs no encryption and no
+    collective (`record_wire_bytes` shows zero bytes for it). The global
+    round index keeps advancing per *executed* round only: `run_until`
+    feeds each chunk's returned `rounds_executed` into the next chunk's
+    `round_offset`, so executed rounds worldwide occupy the disjoint,
+    gapless counter range [round_offset, round_offset + total_executed).
+    Round indices skipped by a halted chunk tail were never used to derive
+    keystream, so re-issuing them to the next chunk cannot reuse a pad.
+
+  * ON THE HOST `run_until` dispatches adaptively sized chunks: starting at
+    `min_chunk` rounds and growing geometrically (×`growth`, capped at
+    `max_chunk`), so a job converging in 7 rounds never dispatches — or
+    compiles — a 32-round program, while long jobs still amortize host
+    round-trips at the full chunk size.
+
 Carried-state contract
 ----------------------
 `state` is REPLICATED: every shard holds the same value on entry, and
@@ -55,19 +103,23 @@ and nothing about it crosses the wire.
 The index is GLOBAL across dispatches: a convergence loop that calls the
 same runner in chunks passes `round_offset` = rounds already executed, so
 chunk 2 continues at round n_rounds, not back at round 0 (which would
-reuse chunk 1's keystreams). `kmeans_fit` threads its iteration counter
-through exactly this way.
+reuse chunk 1's keystreams). `run_until` does exactly this with each
+chunk's `rounds_executed`; `kmeans_fit` and the other convergence loops
+inherit the contract by running on it.
 
 Workloads on the driver: `repro.core.kmeans` (paper §V), `repro.core.sort`
 (TeraSort-style sampling sort with splitter refinement), `repro.core.grep`
-(multi-round streaming grep).
+(multi-round streaming grep) — all three terminate through `run_until`.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Any, Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +128,24 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core.engine import default_hash
-from repro.core.shuffle import SecureShuffleConfig, bucket_pack, keyed_all_to_all
+from repro.core.shuffle import (
+    SecureShuffleConfig,
+    bucket_pack,
+    keyed_all_to_all,
+    wire_accounting,
+)
+
+HALT_LOOP_IMPLS = ("masked_scan", "while")
+# Measured on CPU with the pallas-interpret keystream
+# (benchmarks/bench_iteration_time.py, secure k-means, 8-round chunk
+# converging at round 5): 'while' compiles ~2x faster (34s vs 67s — the
+# cond-gated scan traces the round body into an extra conditional branch)
+# and is ~13% faster per executed round at steady state (it exits the loop
+# instead of running the masked no-op tail), so it is the default.
+# 'masked_scan' is the documented loser but is kept: its traced skip branch
+# is what makes the zero-bytes-for-halted-rounds claim auditable via
+# `record_wire_bytes`, and its aux layout matches the non-halting scan.
+DEFAULT_HALT_LOOP = "while"
 
 
 @dataclass(frozen=True)
@@ -97,6 +166,13 @@ class IterativeSpec:
         destination shard = hash_fn(k) % R.
     capacity:  per-destination slots C; 0 -> auto (ceil(n_mapped / R) * 2).
     n_rounds:  rounds fused into one dispatch.
+    halt_fn(state, aux, round_index) -> bool scalar  [optional]
+        Convergence predicate, evaluated after every round on that round's
+        freshly reduced state/aux. MUST depend only on replicated values so
+        every shard agrees (module docstring: Termination). When set, the
+        fused loop stops executing rounds — and consuming keystream — as
+        soon as it returns True; runners then also return
+        (rounds_executed, halted).
     """
 
     map_fn: Callable[[Any, Any, Any], tuple]
@@ -105,15 +181,21 @@ class IterativeSpec:
     hash_fn: Callable = default_hash
     capacity: int = 0
     n_rounds: int = 1
+    halt_fn: Callable[[Any, Any, Any], Any] | None = None
 
 
 def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shards: int,
-                secure: SecureShuffleConfig | None):
+                secure: SecureShuffleConfig | None, trace_info: dict | None = None):
     mk, mv = spec.map_fn(state, inputs, r)
     if spec.combine_fn is not None:
         mk, mv = spec.combine_fn(mk, mv)
     n_mapped = mk.shape[0]
     capacity = spec.capacity or max(1, -(-n_mapped // n_shards) * 2)
+    if trace_info is not None:
+        # shapes are static, so the resolved capacity is a trace-time fact;
+        # the host reads it back to annotate overflow warnings
+        trace_info["capacity"] = capacity
+        trace_info["capacity_auto"] = not spec.capacity
 
     bucket = (spec.hash_fn(mk) % jnp.uint32(n_shards)).astype(jnp.int32)
     bk, bv, dropped = bucket_pack(mk, bucket, mv, n_shards, capacity)
@@ -128,12 +210,81 @@ def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shar
 
 
 def _shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axis_name: str,
-                n_shards: int, secure: SecureShuffleConfig | None):
+                n_shards: int, secure: SecureShuffleConfig | None,
+                trace_info: dict | None = None):
     rounds = jnp.asarray(round_offset, jnp.uint32) + jnp.arange(spec.n_rounds, dtype=jnp.uint32)
     body = partial(_round_body, inputs=inputs, spec=spec, axis_name=axis_name,
-                   n_shards=n_shards, secure=secure)
+                   n_shards=n_shards, secure=secure, trace_info=trace_info)
     final_state, (aux, dropped) = lax.scan(body, state, rounds)
     return final_state, aux, dropped
+
+
+def _halting_shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axis_name: str,
+                        n_shards: int, secure: SecureShuffleConfig | None, loop_impl: str,
+                        trace_info: dict | None = None):
+    """Halt-aware round loop: stops executing (and consuming keystream) once
+    `spec.halt_fn` fires. Returns (state, aux, dropped, rounds_executed, halted).
+    """
+    n_rounds = spec.n_rounds
+    body = partial(_round_body, inputs=inputs, spec=spec, axis_name=axis_name,
+                   n_shards=n_shards, secure=secure, trace_info=trace_info)
+    r0 = jnp.asarray(round_offset, jnp.uint32)
+
+    # abstract round output, for the passthrough branch / preallocated
+    # buffers; suppressed so the shape-only pass is invisible to wire
+    # accounting (it derives no keystream and moves no bytes)
+    with wire_accounting.suppressed():
+        _state_sds, (aux_sds, dropped_sds) = jax.eval_shape(body, state, r0)
+
+    def _zeros(sds_tree):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds_tree)
+
+    def _halt(new_state, aux, r):
+        return jnp.reshape(jnp.asarray(spec.halt_fn(new_state, aux, r), jnp.bool_), ())
+
+    if loop_impl == "while":
+        aux0 = jax.tree.map(lambda s: jnp.zeros((n_rounds,) + s.shape, s.dtype), aux_sds)
+        dropped0 = jnp.zeros((n_rounds,) + dropped_sds.shape, dropped_sds.dtype)
+
+        def cond(carry):
+            i, _state, _aux, _dropped, halted = carry
+            return jnp.logical_and(~halted, i < n_rounds)
+
+        def w_body(carry):
+            i, state, aux_buf, dropped_buf, _halted = carry
+            r = r0 + i.astype(jnp.uint32)
+            new_state, (aux, dropped) = body(state, r)
+            aux_buf = jax.tree.map(
+                lambda buf, a: lax.dynamic_update_index_in_dim(buf, a, i, 0), aux_buf, aux)
+            dropped_buf = lax.dynamic_update_index_in_dim(dropped_buf, dropped, i, 0)
+            return (i + 1, new_state, aux_buf, dropped_buf, _halt(new_state, aux, r))
+
+        i, final_state, aux, dropped, halted = lax.while_loop(
+            cond, w_body, (jnp.int32(0), state, aux0, dropped0, jnp.bool_(False)))
+        return final_state, aux, dropped, i, halted
+
+    def step(carry, r):
+        state, halted, n_exec = carry
+
+        def live(s):
+            new_state, (aux, dropped) = body(s, r)
+            return new_state, aux, dropped, _halt(new_state, aux, r)
+
+        def skip(s):
+            # no shuffle, no keystream: the halted round is a pure
+            # passthrough (auditable via record_wire_bytes)
+            wire_accounting.note_halted_round(secure is not None)
+            return (s, _zeros(aux_sds),
+                    jnp.zeros(dropped_sds.shape, dropped_sds.dtype), jnp.bool_(True))
+
+        new_state, aux, dropped, halt = lax.cond(halted, skip, live, state)
+        n_exec = n_exec + jnp.where(halted, 0, 1).astype(jnp.int32)
+        return (new_state, halted | halt, n_exec), (aux, dropped)
+
+    rounds = r0 + jnp.arange(n_rounds, dtype=jnp.uint32)
+    (final_state, halted, n_exec), (aux, dropped) = lax.scan(
+        step, (state, jnp.bool_(False), jnp.int32(0)), rounds)
+    return final_state, aux, dropped, n_exec, halted
 
 
 def make_iterative_runner(
@@ -142,16 +293,24 @@ def make_iterative_runner(
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
     chacha_impl: str | None = None,
+    loop_impl: str | None = None,
 ):
     """Build the jitted fused-round function once; call it many times.
 
     `chacha_impl` overrides the secure config's keystream backend
     ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`) — baked
     in at build time, since the impl choice is part of the traced program.
+    `loop_impl` selects the halt-aware loop shape (`HALT_LOOP_IMPLS`;
+    only meaningful when `spec.halt_fn` is set).
 
     Returns fn(inputs, state, round_offset=0) ->
-    (final_state, aux_per_round, dropped_per_round) where aux leaves and
-    `dropped` carry a leading (n_rounds,) dim.
+      (final_state, aux_per_round, dropped_per_round)                  and,
+      when `spec.halt_fn` is set, additionally
+      (..., rounds_executed, halted)
+    where aux leaves and `dropped` carry a leading (n_rounds,) dim; entries
+    past `rounds_executed` are zero-filled no-op rounds. The returned
+    callable exposes `.trace_info`, a dict populated at first trace with the
+    resolved per-destination `capacity` (and whether it was auto-derived).
 
     `round_offset` is the GLOBAL index of the chunk's first round. Callers
     that dispatch the same runner repeatedly (convergence loops) MUST pass
@@ -159,13 +318,27 @@ def make_iterative_runner(
     offset..offset+n_rounds-1, and that global index is what map_fn /
     reduce_fn receive and what keys the per-round keystream — restarting it
     at 0 every chunk would reuse round-0's keystream across chunks (a
-    two-time pad). It is a traced scalar: varying it never recompiles.
+    two-time pad). With a halt_fn, "completed" means *executed*: halted
+    rounds consume no keystream, so the next chunk resumes at
+    offset + rounds_executed. It is a traced scalar: varying it never
+    recompiles.
     """
     if secure is not None:
         secure = secure.with_impl(chacha_impl)
     n_shards = mesh.shape[axis_name]
-    body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards,
-                   secure=secure)
+    trace_info: dict = {}
+    if spec.halt_fn is not None:
+        loop = loop_impl or DEFAULT_HALT_LOOP
+        if loop not in HALT_LOOP_IMPLS:
+            raise ValueError(f"loop_impl must be one of {HALT_LOOP_IMPLS}, got {loop!r}")
+        body = partial(_halting_shard_body, spec=spec, axis_name=axis_name,
+                       n_shards=n_shards, secure=secure, loop_impl=loop,
+                       trace_info=trace_info)
+        extra_out = (P(), P())  # rounds_executed, halted (replicated scalars)
+    else:
+        body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards,
+                       secure=secure, trace_info=trace_info)
+        extra_out = ()
 
     def in_specs(inputs_tree):
         return compat.tree_map(lambda _: P(axis_name), inputs_tree)
@@ -179,12 +352,43 @@ def make_iterative_runner(
                 compat.tree_map(lambda _: P(), state),
                 P(),
                 P(),
-            ),
+            ) + extra_out,
             check_vma=False,
         )
         return fn(inputs, state, jnp.asarray(round_offset, jnp.uint32))
 
-    return jax.jit(run)
+    jitted = jax.jit(run)
+
+    def runner(inputs, state, round_offset=0):
+        return jitted(inputs, state, round_offset)
+
+    runner.trace_info = trace_info
+    return runner
+
+
+def _warn_overflow(dropped, first_round: int, trace_info: dict | None, stacklevel: int = 3):
+    """Surface per-round bucket_pack overflow with enough context to act on.
+
+    Names every overflowing GLOBAL round index and the per-destination
+    capacity that was in force (flagging when it was auto-derived), so users
+    can size `IterativeSpec.capacity` without bisecting rounds.
+    """
+    dropped = np.asarray(dropped)
+    bad = np.nonzero(dropped > 0)[0]
+    if bad.size == 0:
+        return
+    trace_info = trace_info or {}
+    cap = trace_info.get("capacity")
+    cap_s = "capacity unknown (runner not yet traced)"
+    if cap is not None:
+        cap_s = (f"auto capacity {cap}" if trace_info.get("capacity_auto")
+                 else f"capacity {cap}")
+    detail = ", ".join(
+        f"round {first_round + int(j)}: n_dropped={int(dropped[j])}" for j in bad)
+    warnings.warn(
+        f"shuffle overflow — {detail} (per-destination {cap_s}); "
+        f"raise IterativeSpec.capacity to make the job lossless",
+        RuntimeWarning, stacklevel=stacklevel)
 
 
 def run_iterative_mapreduce(
@@ -196,6 +400,8 @@ def run_iterative_mapreduce(
     secure: SecureShuffleConfig | None = None,
     round_offset: int = 0,
     chacha_impl: str | None = None,
+    loop_impl: str | None = None,
+    warn_on_overflow: bool = True,
 ):
     """One-shot convenience: run `spec.n_rounds` fused rounds over
     `mesh[axis_name]`. `inputs` is a pytree sharded on the leading dim;
@@ -205,7 +411,141 @@ def run_iterative_mapreduce(
     secure keystream backend (see `core/shuffle.py`).
 
     Returns (final_state, aux_per_round, dropped_per_round) — dropped has
-    shape (n_rounds,) and must be all-zero for a lossless job.
+    shape (n_rounds,) and must be all-zero for a lossless job — plus
+    (rounds_executed, halted) when `spec.halt_fn` is set. Any round with
+    n_dropped > 0 raises a RuntimeWarning naming the round and the capacity
+    in force (`warn_on_overflow=False` to silence, e.g. when overflow is an
+    expected phase of the job).
     """
-    runner = make_iterative_runner(spec, mesh, axis_name, secure, chacha_impl=chacha_impl)
-    return runner(inputs, init_state, round_offset)
+    runner = make_iterative_runner(spec, mesh, axis_name, secure,
+                                   chacha_impl=chacha_impl, loop_impl=loop_impl)
+    out = runner(inputs, init_state, round_offset)
+    if warn_on_overflow:
+        dropped = out[2]
+        n_exec = int(out[3]) if spec.halt_fn is not None else spec.n_rounds
+        _warn_overflow(np.asarray(dropped)[:n_exec], round_offset, runner.trace_info)
+    return out
+
+
+@dataclass(frozen=True)
+class RunUntilResult:
+    """Outcome of a convergence-aware `run_until` job.
+
+    state:             final carried state (device arrays, replicated) — the
+                       state produced by the round that triggered the halt
+                       (or the last round when the budget ran out).
+    aux:               per-round aux pytree, leaves stacked over the
+                       `rounds_executed` EXECUTED rounds only (numpy);
+                       masked no-op rounds are trimmed.
+    dropped:           (rounds_executed,) overflow counts per executed round.
+    rounds_executed:   rounds whose body actually ran (== keystream rounds
+                       consumed in secure mode).
+    rounds_dispatched: rounds the host shipped to the device across all
+                       chunks (>= rounds_executed; the gap is the masked
+                       no-op tail of the halting chunk).
+    n_dispatches:      host->device round trips.
+    halted:            True when halt_fn fired; False when `max_rounds` was
+                       exhausted first.
+    """
+
+    state: Any
+    aux: Any
+    dropped: Any
+    rounds_executed: int
+    rounds_dispatched: int
+    n_dispatches: int
+    halted: bool
+
+
+def run_until(
+    spec: IterativeSpec,
+    inputs,
+    init_state,
+    mesh: Mesh,
+    axis_name: str = "data",
+    *,
+    secure: SecureShuffleConfig | None = None,
+    max_rounds: int = 64,
+    round_offset: int = 0,
+    min_chunk: int = 1,
+    growth: int = 2,
+    max_chunk: int | None = None,
+    chacha_impl: str | None = None,
+    loop_impl: str | None = None,
+    runners: dict | None = None,
+    warn_on_overflow: bool = True,
+) -> RunUntilResult:
+    """Run a job until `spec.halt_fn` fires or `max_rounds` rounds executed.
+
+    The convergence-aware twin of `run_iterative_mapreduce`: rounds are
+    dispatched in adaptively sized chunks — `min_chunk` rounds first, then
+    ×`growth` per dispatch up to `max_chunk` (default `max_rounds`) — and
+    each chunk's fused round loop early-exits on device the moment
+    `halt_fn` fires (module docstring: Termination). A job converging in 7
+    rounds therefore neither compiles nor dispatches a 32-round program,
+    and pays for no post-convergence rounds beyond the masked no-op tail of
+    its final chunk.
+
+    The global round index — and with it the secure keystream space — is
+    threaded across chunks automatically: chunk i+1's round_offset is
+    `round_offset` + total rounds *executed* so far, which is exactly the
+    keystream-disjointness contract (halted rounds consume none).
+
+    `spec.n_rounds` is ignored (chunk sizes are chosen here). A spec
+    without `halt_fn` is allowed: the job simply runs all `max_rounds`
+    rounds (useful to share this entry point across workloads).
+
+    `runners`: optional mutable dict mapping chunk size -> runner, reused
+    across calls to amortize XLA compiles. Callers own its validity: it must
+    have been populated with the SAME spec (sans n_rounds) / mesh / secure /
+    impl arguments.
+    """
+    if max_rounds < 1:
+        raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    if min_chunk < 1 or growth < 1:
+        raise ValueError(f"min_chunk and growth must be >= 1, got {min_chunk}, {growth}")
+    max_chunk = min(max_chunk or max_rounds, max_rounds)
+    runners = {} if runners is None else runners
+
+    state = init_state
+    executed = dispatched = n_dispatches = 0
+    halted = False
+    aux_chunks: list = []
+    dropped_chunks: list = []
+    chunk = min(max(1, min_chunk), max_chunk)
+    while executed < max_rounds and not halted:
+        n = min(chunk, max_rounds - executed)
+        runner = runners.get(n)
+        if runner is None:
+            runner = runners[n] = make_iterative_runner(
+                replace(spec, n_rounds=n), mesh, axis_name, secure,
+                chacha_impl=chacha_impl, loop_impl=loop_impl)
+        out = runner(inputs, state, round_offset + executed)
+        if spec.halt_fn is None:
+            state, aux, dropped = out
+            n_exec, chunk_halted = n, False
+        else:
+            state, aux, dropped, n_exec, chunk_halted = out
+            n_exec, chunk_halted = int(n_exec), bool(chunk_halted)
+        n_dispatches += 1
+        dispatched += n
+        aux_chunks.append(jax.tree.map(lambda a: np.asarray(a)[:n_exec], aux))
+        dropped_chunks.append(np.asarray(dropped)[:n_exec])
+        if warn_on_overflow:
+            _warn_overflow(dropped_chunks[-1], round_offset + executed,
+                           runner.trace_info, stacklevel=4)
+        executed += n_exec
+        halted = chunk_halted
+        chunk = min(chunk * growth, max_chunk)
+
+    aux = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *aux_chunks)
+    dropped = np.concatenate(dropped_chunks) if dropped_chunks else np.zeros((0,), np.int32)
+    return RunUntilResult(
+        state=state,
+        aux=aux,
+        dropped=dropped,
+        rounds_executed=executed,
+        rounds_dispatched=dispatched,
+        n_dispatches=n_dispatches,
+        halted=halted,
+    )

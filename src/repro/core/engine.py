@@ -106,3 +106,64 @@ def run_mapreduce(
         body, mesh=mesh, in_specs=in_specs, out_specs=(out_specs, P()), check_vma=False
     )
     return jax.jit(fn)(keys, values)
+
+
+def run_mapreduce_until(
+    spec: MapReduceSpec,
+    keys,
+    values,
+    init_state,
+    mesh: Mesh,
+    axis_name: str = "data",
+    *,
+    halt_fn,
+    fold_fn=None,
+    max_rounds: int = 16,
+    secure: SecureShuffleConfig | None = None,
+    chacha_impl: str | None = None,
+    loop_impl: str | None = None,
+    min_chunk: int = 1,
+    growth: int = 2,
+    max_chunk: int | None = None,
+):
+    """Repeat a single-round MapReduce job until `halt_fn` says stop.
+
+    Lifts `spec` into the convergence-aware iterative driver: every round
+    re-maps the same sharded (keys, values), reduces per shard, folds the
+    round's reduce output into the carried state via
+    `fold_fn(state, round_output)` (default: the output REPLACES the
+    state), then evaluates `halt_fn(state, round_output, round_index)` on
+    the folded state — all inside the fused, halt-masked round loop of
+    `repro.core.driver.run_until` (adaptive dispatch chunking, on-device
+    early exit, per-round disjoint keystreams in secure mode). The driver's
+    replicated-halt contract applies: `spec.reduce_fn` must end in a
+    collective and `halt_fn` must depend only on replicated values.
+
+    Returns the driver's `RunUntilResult` (state, per-round aux = the raw
+    reduce outputs, rounds executed vs dispatched, halted).
+    """
+    # local import: driver imports this module for default_hash
+    from repro.core.driver import IterativeSpec, run_until
+
+    def map_fn(state, inputs, r):
+        return spec.map_fn(inputs["k"], inputs["v"])
+
+    def reduce_fn(state, rk, rv, valid, r):
+        out = spec.reduce_fn(rk, rv, valid)
+        new_state = out if fold_fn is None else fold_fn(state, out)
+        return new_state, out
+
+    ispec = IterativeSpec(
+        map_fn=map_fn,
+        reduce_fn=reduce_fn,
+        combine_fn=spec.combine_fn,
+        hash_fn=spec.hash_fn,
+        capacity=spec.capacity,
+        halt_fn=halt_fn,
+    )
+    return run_until(
+        ispec, {"k": keys, "v": values}, init_state, mesh, axis_name,
+        secure=secure, max_rounds=max_rounds, min_chunk=min_chunk,
+        growth=growth, max_chunk=max_chunk, chacha_impl=chacha_impl,
+        loop_impl=loop_impl,
+    )

@@ -20,14 +20,20 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh
 
-from repro.core.driver import IterativeSpec, run_iterative_mapreduce
+from repro.core.driver import IterativeSpec, run_until
 from repro.core.engine import identity_hash
 from repro.core.shuffle import SecureShuffleConfig
 
 
 def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
-                   n_rounds: int = 1) -> IterativeSpec:
-    """Driver spec: state = running (n_patterns,) hit counts (replicated)."""
+                   max_matches: int | None = None) -> IterativeSpec:
+    """Driver spec: state = running (n_patterns,) hit counts (replicated).
+
+    `max_matches` installs a `grep -m`-style halt: stop streaming once the
+    TOTAL hit count (summed over patterns) reaches the limit. The running
+    counts are replicated state (reduce ends in a psum), so the halt
+    decision satisfies the driver's replicated-halt contract.
+    """
     patterns = jnp.asarray(patterns, jnp.int32)
     n_pat = patterns.shape[0]
 
@@ -47,12 +53,19 @@ def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
         new_state = state + hits
         return new_state, {"round_hits": hits}
 
+    halt_fn = None
+    if max_matches is not None:
+        limit = jnp.float32(max_matches)
+
+        def halt_fn(state, aux, r):
+            return jnp.sum(state) >= limit
+
     return IterativeSpec(
         map_fn=map_fn,
         reduce_fn=reduce_fn,
         hash_fn=identity_hash,  # reducer = pattern_id % R
         capacity=chunk,  # lossless: a chunk may be all one pattern
-        n_rounds=n_rounds,
+        halt_fn=halt_fn,  # n_rounds is chosen per chunk by run_until
     )
 
 
@@ -64,16 +77,27 @@ def grep_count(
     axis_name: str = "data",
     secure: SecureShuffleConfig | None = None,
     n_rounds: int = 4,
+    max_matches: int | None = None,
     chacha_impl: str | None = None,
+    loop_impl: str | None = None,
 ):
     """Count occurrences of each pattern token in `tokens` (int32, sharded).
 
     The per-shard stream is split into `n_rounds` chunks processed by
     successive fused rounds (the round index doubles as the stream cursor,
-    so this job always starts at round_offset 0). Returns
-    (counts (n_patterns,), per_round_hits (n_rounds, n_patterns),
-    dropped (n_rounds,)). `chacha_impl` selects the secure keystream
-    backend (see `core/shuffle.py`).
+    so this job always starts at round_offset 0 — and the convergence-aware
+    driver resumes exactly where the stream stopped, because halted rounds
+    advance neither the cursor nor the keystream). Returns
+    (counts (n_patterns,), per_round_hits (rounds_executed, n_patterns),
+    dropped (rounds_executed,)).
+
+    `max_matches` is a `grep -m`-style early exit: streaming stops the
+    round the TOTAL hit count reaches the limit, through `run_until` with
+    adaptive chunking, so a limit met in chunk 2 of 64 never dispatches the
+    remaining corpus. Without it the whole stream runs as one fused
+    dispatch, exactly as before. `chacha_impl` selects the secure keystream
+    backend (see `core/shuffle.py`); `loop_impl` the halt-loop shape
+    (`core/driver.py`).
     """
     tokens = jnp.asarray(tokens, jnp.int32)
     n = tokens.shape[0]
@@ -84,10 +108,15 @@ def grep_count(
     chunk = n_loc // n_rounds
 
     patterns = jnp.asarray(patterns, jnp.int32)
-    spec = make_grep_spec(patterns, chunk, axis_name=axis_name, n_rounds=n_rounds)
+    spec = make_grep_spec(patterns, chunk, axis_name=axis_name,
+                          max_matches=max_matches)
     init = jnp.zeros((patterns.shape[0],), jnp.float32)
-    final, aux, dropped = run_iterative_mapreduce(
-        spec, {"t": tokens}, init, mesh, axis_name=axis_name, secure=secure,
-        chacha_impl=chacha_impl,
+    # no limit -> one fused dispatch of the whole stream (min_chunk covers
+    # every round); with a limit, start small and grow geometrically
+    min_chunk = n_rounds if max_matches is None else 1
+    res = run_until(
+        spec, {"t": tokens}, init, mesh, axis_name, secure=secure,
+        max_rounds=n_rounds, min_chunk=min_chunk,
+        chacha_impl=chacha_impl, loop_impl=loop_impl,
     )
-    return final, aux["round_hits"], dropped
+    return res.state, res.aux["round_hits"], res.dropped

@@ -10,20 +10,24 @@ center row is contributed by exactly one owner).
 
 Termination (§V): iterate until the average distance between consecutive
 centers drops below a threshold; the paper uses diag/1000 of the bounding box.
+The threshold test IS the job's halt predicate: `kmeans_fit` bakes it into
+`IterativeSpec.halt_fn`, so the convergence decision is taken ON DEVICE by
+`repro.core.driver.run_until` — the fused round loop stops paying for
+map/shuffle/reduce (and stops consuming keystream, in secure mode) the moment
+the average center shift crosses the threshold, and the host dispatches
+adaptively growing chunks so a run converging in 7 rounds never compiles a
+32-round program.
 
 Two execution paths share the identical per-round math:
   * `make_kmeans_step` — one iteration per dispatch (the historical loop;
     kept as the oracle for equivalence tests);
-  * `kmeans_fit` — fuses `rounds_per_dispatch` iterations into a single
-    dispatch via `repro.core.driver.run_iterative_mapreduce` (`lax.scan`
-    under shard_map), cutting host round-trips by that factor. Per-round
-    centers/shifts come back as stacked aux, so the convergence point is
-    recovered exactly even when it lands mid-chunk.
+  * `kmeans_fit` — convergence-aware fused rounds through
+    `repro.core.driver.run_until` (halt-masked `lax.scan` under shard_map).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import numpy as np
@@ -34,7 +38,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.driver import IterativeSpec, make_iterative_runner
+from repro.core.driver import IterativeSpec, run_until
 from repro.core.engine import MapReduceSpec, identity_hash
 from repro.core.shuffle import SecureShuffleConfig, bucket_pack, keyed_all_to_all
 from repro.kernels.kmeans.ops import kmeans_assign
@@ -47,6 +51,7 @@ class KMeansResult:
     center_shift: list  # avg centroid move per iteration
     inertia: float
     n_dispatches: int = 0  # host->device round-trips spent on iterations
+    n_rounds_dispatched: int = 0  # rounds shipped to device (>= n_iter executed)
 
 
 def _assign_partials(points, weights, centers, impl):
@@ -122,11 +127,20 @@ def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleC
 
 
 def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
-                               n_rounds: int = 1, axis_name: str = "data") -> IterativeSpec:
+                               n_rounds: int = 1, axis_name: str = "data",
+                               threshold: float | None = None) -> IterativeSpec:
     """The same per-round math as `make_kmeans_step`, as a driver spec.
 
     Carried state = the (k, d) center table (replicated); aux per round =
     {"centers", "shift"} so convergence mid-chunk is recoverable on the host.
+
+    `threshold` (paper §V convergence rule) installs the on-device halt
+    predicate `shift < threshold` as the spec's `halt_fn` — the shift is a
+    function of the replicated center table, so every shard agrees on the
+    decision by construction (the driver's replicated-halt contract). The
+    comparison is done in float32, matching the dtype of the on-device
+    shift, so host-side reference loops must compare in float32 too to stop
+    at the identical round.
     """
 
     def map_fn(centers, inputs, r):
@@ -138,29 +152,70 @@ def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
         )
         return new_centers, {"centers": new_centers, "shift": shift}
 
+    halt_fn = None
+    if threshold is not None:
+        thr = jnp.float32(threshold)
+
+        def halt_fn(centers, aux, r):
+            return aux["shift"] < thr
+
     return IterativeSpec(
         map_fn=map_fn,
         reduce_fn=reduce_fn,
         hash_fn=identity_hash,
         capacity=-(-k // n_shards),
         n_rounds=n_rounds,
+        halt_fn=halt_fn,
     )
+
+
+@dataclass
+class KMeansRunnerCache:
+    """Prebuilt `run_until` runner cache for `kmeans_fit` (shareable jit cache).
+
+    Holds the iterative spec (halt threshold baked in) and the per-chunk-size
+    jitted runners that `run_until` populates lazily; pass as `kmeans_fit`'s
+    `runner=` to amortize the (expensive, secure-mode) XLA compiles across
+    many fits with the same k/mesh/secure/impl/threshold.
+    """
+
+    spec: IterativeSpec
+    mesh: Mesh
+    axis_name: str
+    secure: SecureShuffleConfig | None
+    chacha_impl: str | None
+    loop_impl: str | None
+    max_chunk: int
+    threshold: float | None
+    min_chunk: int = 1
+    runners: dict = field(default_factory=dict)
 
 
 def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
                        secure: SecureShuffleConfig | None = None, impl: str = "jnp",
-                       rounds_per_dispatch: int = 8, chacha_impl: str | None = None):
-    """Prebuild the fused-round runner for `kmeans_fit` (shareable jit cache).
+                       rounds_per_dispatch: int = 8, threshold: float | None = None,
+                       min_chunk: int = 1, chacha_impl: str | None = None,
+                       loop_impl: str | None = None) -> KMeansRunnerCache:
+    """Prebuild the convergence-aware runner cache for `kmeans_fit`.
 
-    Returns (runner, rounds_per_dispatch); pass the pair as `kmeans_fit`'s
-    `runner=` to amortize the (expensive, secure-mode) XLA compile across
-    many fits with the same k/mesh/secure/impl. `chacha_impl` selects the
-    secure keystream backend (see `core/shuffle.py`).
+    `threshold` bakes the paper's §V stopping rule into the on-device
+    halt_fn (None leaves halting to `kmeans_fit`'s resolved threshold at
+    fit time — but then the cache cannot be reused, so pass it when known).
+    `rounds_per_dispatch` caps the adaptive chunk growth (`run_until`
+    max_chunk); `min_chunk` sets the first chunk's size (larger values
+    amortize more rounds per dispatch up front at the cost of more masked
+    no-op rounds when convergence is very fast). `chacha_impl` selects the
+    secure keystream backend (see `core/shuffle.py`); `loop_impl` the
+    halt-loop shape (`core/driver.py`).
     """
     spec = make_kmeans_iterative_spec(k, mesh.shape[axis_name], impl=impl,
-                                      n_rounds=rounds_per_dispatch, axis_name=axis_name)
-    return (make_iterative_runner(spec, mesh, axis_name, secure, chacha_impl=chacha_impl),
-            rounds_per_dispatch)
+                                      axis_name=axis_name, threshold=threshold)
+    return KMeansRunnerCache(
+        spec=spec, mesh=mesh, axis_name=axis_name, secure=secure,
+        chacha_impl=chacha_impl, loop_impl=loop_impl,
+        max_chunk=max(1, rounds_per_dispatch), threshold=threshold,
+        min_chunk=max(1, min_chunk),
+    )
 
 
 def kmeans_fit(
@@ -177,24 +232,31 @@ def kmeans_fit(
     init: str = "first",
     weights=None,
     rounds_per_dispatch: int = 8,
-    runner=None,
+    min_chunk: int = 1,
+    runner: KMeansRunnerCache | None = None,
     chacha_impl: str | None = None,
+    loop_impl: str | None = None,
 ) -> KMeansResult:
     """Iterate to convergence. threshold=None -> paper's diag/1000 rule.
 
     init: "first" (paper-style arbitrary start) or "farthest" (greedy
     farthest-point, k-means++-like, robust to clumped starts).
 
-    `rounds_per_dispatch` iterations run fused inside one jitted scan
-    (`run_iterative_mapreduce`); the host only inspects the stacked per-round
-    shifts between chunks, so a converged run costs ~n_iter/rounds_per_dispatch
-    device dispatches (`KMeansResult.n_dispatches`) instead of n_iter. The
-    global iteration count is threaded into each chunk as the driver's
-    round_offset, keeping every secure round's keystream disjoint across
-    dispatches. `runner`: a prebuilt `make_kmeans_runner(...)` result to
-    reuse its jit cache across fits (must match k/mesh/secure/impl/
-    rounds_per_dispatch). `chacha_impl` selects the secure keystream backend
-    (see `core/shuffle.py`); ignored when `runner` is supplied.
+    Convergence is decided ON DEVICE: the threshold rule is the job's
+    `halt_fn`, and `repro.core.driver.run_until` runs the fused round loop
+    with adaptive dispatch chunking (chunks grow 1, 2, 4, ... up to
+    `rounds_per_dispatch`), early-exiting the moment the average center
+    shift crosses the threshold. Post-convergence rounds are never executed
+    — no map, no shuffle, no keystream — and the host pays
+    `KMeansResult.n_dispatches` round-trips, ~log2 of the iteration count
+    plus the steady-state chunks. The global iteration count threads into
+    each chunk as the driver's round_offset, keeping every secure round's
+    keystream disjoint across dispatches. `runner`: a prebuilt
+    `make_kmeans_runner(...)` cache to reuse its jit cache across fits
+    (must match k/mesh/secure/impl/threshold; its baked-in threshold wins).
+    `chacha_impl` selects the secure keystream backend (see
+    `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`);
+    both ignored when `runner` is supplied.
     """
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -204,44 +266,35 @@ def kmeans_fit(
         init_centers = points[:k] if init == "first" else _farthest_point_init(points, k)
     centers = jnp.asarray(init_centers, jnp.float32)
 
-    if threshold is None:
+    if runner is not None and runner.threshold is not None:
+        threshold = runner.threshold
+    elif threshold is None:
         lo = jnp.min(points, axis=0)
         hi = jnp.max(points, axis=0)
         threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0  # paper §V
 
-    rounds = max(1, min(rounds_per_dispatch, max_iter))
     if runner is None:
-        runner, rounds = make_kmeans_runner(
+        runner = make_kmeans_runner(
             mesh, k, axis_name=axis_name, secure=secure, impl=impl,
-            rounds_per_dispatch=rounds, chacha_impl=chacha_impl,
+            rounds_per_dispatch=max(1, min(rounds_per_dispatch, max_iter)),
+            threshold=threshold, min_chunk=min_chunk,
+            chacha_impl=chacha_impl, loop_impl=loop_impl,
         )
-    else:
-        runner, rounds = runner
+    elif runner.threshold is None:
+        raise ValueError(
+            "kmeans_fit runner cache was built without a threshold: pass "
+            "threshold= to make_kmeans_runner so the on-device halt_fn is "
+            "baked into its cached programs")
     inputs = {"p": points, "w": jnp.asarray(weights, jnp.float32)}
 
-    shifts: list[float] = []
-    it = 0
-    n_dispatches = 0
-    while it < max_iter:
-        # round_offset = iterations already done: keeps the global round
-        # index (and thus the secure keystream space) advancing across chunks
-        final, aux, _dropped = runner(inputs, centers, it)
-        n_dispatches += 1
-        chunk_shifts = np.asarray(aux["shift"])
-        converged_j = None
-        for j in range(rounds):
-            it += 1
-            shifts.append(float(chunk_shifts[j]))
-            if shifts[-1] < threshold:
-                converged_j = j
-                break
-            if it >= max_iter:
-                converged_j = j
-                break
-        if converged_j is not None:
-            centers = jnp.asarray(aux["centers"])[converged_j]
-            break
-        centers = final
+    res = run_until(
+        runner.spec, inputs, centers, runner.mesh, runner.axis_name,
+        secure=runner.secure, max_rounds=max_iter, max_chunk=runner.max_chunk,
+        min_chunk=runner.min_chunk, chacha_impl=runner.chacha_impl,
+        loop_impl=runner.loop_impl, runners=runner.runners,
+    )
+    centers = jnp.asarray(res.state)
+    shifts = [float(s) for s in np.asarray(res.aux["shift"])]
 
     d2 = (
         jnp.sum(points * points, axis=1, keepdims=True)
@@ -249,8 +302,9 @@ def kmeans_fit(
         - 2.0 * points @ centers.T
     )
     inertia = float(jnp.sum(jnp.min(d2, axis=1)))
-    return KMeansResult(centers=centers, n_iter=it, center_shift=shifts, inertia=inertia,
-                        n_dispatches=n_dispatches)
+    return KMeansResult(centers=centers, n_iter=res.rounds_executed, center_shift=shifts,
+                        inertia=inertia, n_dispatches=res.n_dispatches,
+                        n_rounds_dispatched=res.rounds_dispatched)
 
 
 def _farthest_point_init(points, k: int):

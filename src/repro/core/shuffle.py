@@ -51,6 +51,7 @@ unimportable on this platform, 'auto'/'pallas' silently fall back to 'jnp'
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any
 
@@ -82,9 +83,19 @@ def resolve_chacha_impl(impl: str = "auto") -> tuple[str, bool]:
     on a backend with a compiled Pallas lowering; plain 'pallas' interprets
     only off-TPU. Falls back to 'jnp' when Pallas is unimportable.
     """
+    from_env = False
     if impl in (None, "auto"):
-        impl = os.environ.get(CHACHA_IMPL_ENV, "pallas")
+        env_val = os.environ.get(CHACHA_IMPL_ENV)
+        if env_val is None:
+            impl = "pallas"
+        else:
+            impl, from_env = env_val, True
     if impl not in _VALID_IMPLS or impl == "auto":
+        if from_env:
+            raise ValueError(
+                f"invalid ${CHACHA_IMPL_ENV}={impl!r} in the environment: "
+                f"chacha impl must be one of {_VALID_IMPLS[1:]} "
+                f"(unset ${CHACHA_IMPL_ENV} to use the default 'pallas')")
         raise ValueError(
             f"chacha impl must be one of {_VALID_IMPLS[1:]}, got {impl!r}")
     if impl == "jnp" or not _HAVE_PALLAS:
@@ -262,10 +273,32 @@ class _WireAccounting:
         self.enabled = False
         self.records: list[dict] = []
 
-    def note(self, *, secure: bool, nbytes: int, n_leaves: int):
+    def note(self, *, secure: bool, nbytes: int, n_leaves: int, halted: bool = False):
         if self.enabled:
             self.records.append(
-                {"secure": secure, "bytes": nbytes, "leaves": n_leaves})
+                {"secure": secure, "bytes": nbytes, "leaves": n_leaves,
+                 "halted": halted})
+
+    def note_halted_round(self, secure: bool = True):
+        """Record the halted-round passthrough: ZERO bytes cross the wire.
+
+        Called while tracing the skip branch of the driver's halt-masked
+        round loop — the branch contains no all_to_all and no keystream
+        derivation, so the bytes a halted round contributes are zero by
+        construction, and the record makes that auditable from benchmarks.
+        """
+        self.note(secure=secure, nbytes=0, n_leaves=0, halted=True)
+
+    @contextmanager
+    def suppressed(self):
+        """Context: disable THIS recorder (abstract eval_shape passes would
+        otherwise double-count a shuffle the driver only traces for shapes)."""
+        prev = self.enabled
+        self.enabled = False
+        try:
+            yield
+        finally:
+            self.enabled = prev
 
 
 wire_accounting = _WireAccounting()

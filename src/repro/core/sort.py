@@ -5,19 +5,24 @@ reducer i iff splitter[i-1] <= v < splitter[i], each reducer sorts its range
 locally; the concatenation of reducer outputs is globally sorted. The hard
 part is *choosing* the splitters — TeraSort samples the input first.
 
-Here the sampling pass and the sort pass are rounds of ONE fused
-`run_iterative_mapreduce` dispatch: every round range-partitions by the
-*current* splitter table (carried state), reducers sort what they received
-and count their load, and the reduce step refines the splitters toward
-equi-depth by inverting the piecewise-linear CDF observed on the round's
-bucket counts. Round 0 with uniform splitters is the "sampling" pass (skewed
-inputs may overflow per-destination capacity — the driver surfaces that as a
-per-round `n_dropped`); by the last round the splitters are balanced, drops
-hit zero, and the carried `sorted` buffer holds the answer. Shapes are fixed
-every round, so the whole job is a single `lax.scan` under shard_map.
+Here the sampling pass and the sort pass are rounds of ONE convergence-aware
+`run_until` job: every round range-partitions by the *current* splitter
+table (carried state), reducers sort what they received and count their
+load, and the reduce step refines the splitters toward equi-depth by
+inverting the piecewise-linear CDF observed on the round's bucket counts.
+Round 0 with uniform splitters is the "sampling" pass (skewed inputs may
+overflow per-destination capacity — the driver surfaces that as a per-round
+`n_dropped`); refinement stops THE ROUND the partition becomes good enough:
+the job's halt_fn fires once a round is lossless (every record received) and
+balanced (max reducer load within `balance`x of the fair share), so
+well-conditioned inputs pay for one round instead of a fixed refinement
+budget. Shapes are fixed every round, so each chunk is a single halt-masked
+`lax.scan` under shard_map.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh
 
-from repro.core.driver import IterativeSpec, run_iterative_mapreduce
+from repro.core.driver import IterativeSpec, run_until
 from repro.core.engine import identity_hash
 from repro.core.shuffle import SecureShuffleConfig
 
@@ -47,13 +52,20 @@ def equidepth_edges(edges, counts):
 
 
 def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "data",
-                          n_rounds: int = 2) -> IterativeSpec:
+                          n_rounds: int = 2, halt_total: int | None = None,
+                          balance: float = 1.5) -> IterativeSpec:
     """Driver spec for sampling sort over `n_shards` reducers.
 
     State: {"edges": (R+1,) f32 range-partition edges,
             "sorted": (R, R*capacity) f32 per-reducer sorted ranges
                       (+inf padding past each reducer's count),
             "counts": (R,) f32 per-reducer received counts}.
+
+    `halt_total` (the job's total record count) installs the refinement
+    halt predicate: stop once a round received every record (lossless —
+    counts sum to `halt_total`) AND no reducer holds more than `balance`
+    times the fair share. Both terms are functions of the replicated
+    `counts` table, satisfying the driver's replicated-halt contract.
     """
 
     def map_fn(state, inputs, r):
@@ -79,12 +91,22 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
         }
         return new_state, {"counts": counts}
 
+    halt_fn = None
+    if halt_total is not None:
+        fair = jnp.float32(balance * halt_total / n_shards)
+        total = jnp.float32(halt_total)
+
+        def halt_fn(state, aux, r):
+            counts = aux["counts"]
+            return (jnp.sum(counts) >= total) & (jnp.max(counts) <= fair)
+
     return IterativeSpec(
         map_fn=map_fn,
         reduce_fn=reduce_fn,
         hash_fn=identity_hash,  # key IS the destination reducer
         capacity=capacity,
         n_rounds=n_rounds,
+        halt_fn=halt_fn,
     )
 
 
@@ -98,17 +120,25 @@ def sample_sort(
     capacity: int | None = None,
     lo: float | None = None,
     hi: float | None = None,
+    balance: float = 1.5,
     chacha_impl: str | None = None,
+    loop_impl: str | None = None,
 ):
     """Sort `values` (f32, sharded on the leading dim) via sampling sort.
 
-    Returns (sorted_values, counts (R,), dropped (n_rounds,)): row i of the
-    carried buffer holds reducer i's sorted range, so concatenating each
-    row's first counts[i] entries in row order — no global re-sort — yields
-    the sorted array (length n minus any final-round drops). `capacity` is
-    per-(source, destination) slots; defaults to the lossless worst case (a
-    whole source shard landing in one range). `chacha_impl` selects the
-    secure keystream backend (see `core/shuffle.py`).
+    Returns (sorted_values, counts (R,), dropped (rounds_executed,)): row i
+    of the carried buffer holds reducer i's sorted range, so concatenating
+    each row's first counts[i] entries in row order — no global re-sort —
+    yields the sorted array (length n minus any final-round drops).
+    `capacity` is per-(source, destination) slots; defaults to the lossless
+    worst case (a whole source shard landing in one range).
+
+    `n_rounds` is the refinement BUDGET, not a fixed cost: the job runs
+    through the convergence-aware driver (`run_until`) and halts the round
+    the partition is lossless and balanced within `balance`x of fair share
+    — `len(dropped)` reports how many rounds actually executed.
+    `chacha_impl` selects the secure keystream backend (see
+    `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`).
     """
     values = jnp.asarray(values, jnp.float32)
     n = values.shape[0]
@@ -130,13 +160,25 @@ def sample_sort(
         "sorted": jnp.full((r, r * capacity), jnp.inf, jnp.float32),
         "counts": jnp.zeros((r,), jnp.float32),
     }
-    spec = make_sample_sort_spec(r, capacity, axis_name=axis_name, n_rounds=n_rounds)
-    final, aux, dropped = run_iterative_mapreduce(
-        spec, {"v": values}, init_state, mesh, axis_name=axis_name, secure=secure,
-        chacha_impl=chacha_impl,
+    spec = make_sample_sort_spec(r, capacity, axis_name=axis_name,
+                                 halt_total=n, balance=balance)
+    # early-round overflow is the sampling phase working as designed, not a
+    # sizing bug — keep the driver's per-round warning quiet and instead
+    # surface the case that IS data loss: drops in the final executed round
+    res = run_until(
+        spec, {"v": values}, init_state, mesh, axis_name, secure=secure,
+        max_rounds=n_rounds, chacha_impl=chacha_impl, loop_impl=loop_impl,
+        warn_on_overflow=False,
     )
+    if res.dropped.size and int(res.dropped[-1]) > 0:
+        warnings.warn(
+            f"sample_sort exhausted its {n_rounds}-round refinement budget "
+            f"with {int(res.dropped[-1])} records dropped in the final round "
+            f"(per-(source,destination) capacity {capacity}); the output is "
+            f"TRUNCATED — raise capacity or n_rounds",
+            RuntimeWarning, stacklevel=2)
 
-    rows = np.asarray(final["sorted"])
-    counts = np.asarray(final["counts"])
+    rows = np.asarray(res.state["sorted"])
+    counts = np.asarray(res.state["counts"])
     out = np.concatenate([rows[i, : int(counts[i])] for i in range(r)])
-    return out, counts, dropped
+    return out, counts, res.dropped

@@ -1,0 +1,374 @@
+"""Convergence-aware driver (`run_until`): halt semantics, masked no-op
+rounds, keystream accounting across early-exited + resumed chunks, loop-impl
+equivalence, adaptive chunking, overflow warnings, engine entry point."""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh
+from repro.core import shuffle
+from repro.core.driver import (
+    HALT_LOOP_IMPLS,
+    IterativeSpec,
+    make_iterative_runner,
+    run_iterative_mapreduce,
+    run_until,
+)
+from repro.core.engine import MapReduceSpec, identity_hash, run_mapreduce_until
+from repro.core.grep import grep_count
+from repro.core.kmeans import (
+    generate_points,
+    kmeans_fit,
+    make_kmeans_iterative_spec,
+    make_kmeans_runner,
+    make_kmeans_step,
+)
+from repro.core.shuffle import SecureShuffleConfig, record_wire_bytes
+from repro.core.sort import sample_sort
+from repro.crypto import chacha
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+def _secure_cfg():
+    return SecureShuffleConfig(
+        key_words=chacha.key_to_words(bytes(range(32))),
+        nonce_words=chacha.nonce_to_words(b"\x11" * 12),
+        counter0=7,
+    )
+
+
+def _counting_spec(halt_at=None, n=8, capacity=8):
+    """Each round shuffles n unit items into state += n; aux records the
+    GLOBAL round index and the received count. halt_at: halt once the global
+    round index reaches it (the halting round still executes)."""
+
+    def map_fn(state, inputs, r):
+        return jnp.zeros((n,), jnp.int32), {"v": jnp.ones((n,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        got = jax.lax.psum(jnp.sum(jnp.where(valid, rv["v"], 0.0)), "data")
+        return state + got, {"round": r, "got": got}
+
+    halt_fn = None
+    if halt_at is not None:
+        def halt_fn(state, aux, r):
+            return r >= jnp.uint32(halt_at)
+
+    return IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=capacity, n_rounds=1, halt_fn=halt_fn)
+
+
+_INPUTS = {"x": jnp.zeros((4,), jnp.float32)}
+
+
+# --- fused early exit == per-round reference loop -----------------------------
+
+
+def test_run_until_kmeans_bitexact_vs_loop_stopped_same_round():
+    """Fused `run_until` with the on-device threshold halt lands on the same
+    round — and the same bits — as the per-round oracle loop stopped by the
+    identical (float32) threshold comparison."""
+    mesh = _mesh1()
+    pts, _ = generate_points(1024, 6, seed=3, spread=0.04)
+    pts = jnp.asarray(pts)
+    lo, hi = jnp.min(pts, axis=0), jnp.max(pts, axis=0)
+    threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0
+
+    step = make_kmeans_step(mesh)
+    w = jnp.ones((pts.shape[0],), jnp.float32)
+    c_loop = pts[:6]
+    loop_shifts = []
+    for it in range(1, 65):
+        c_loop, s = step(pts, w, c_loop)
+        loop_shifts.append(float(s))
+        if np.float32(s) < np.float32(threshold):  # device compares in f32
+            break
+
+    res = kmeans_fit(pts, 6, mesh, threshold=threshold, max_iter=64)
+    assert res.n_iter == it
+    np.testing.assert_array_equal(np.asarray(res.centers), np.asarray(c_loop))
+    assert res.center_shift == loop_shifts
+    # convergence preceded the budget: strictly fewer dispatches than rounds
+    assert res.n_dispatches < res.n_iter
+
+
+@pytest.mark.parametrize("loop_impl", HALT_LOOP_IMPLS)
+def test_loop_impls_bitexact(loop_impl):
+    """'masked_scan' and 'while' produce identical outputs, counts, flags."""
+    spec = replace(_counting_spec(halt_at=2), n_rounds=6)
+    runner = make_iterative_runner(spec, _mesh1(), loop_impl=loop_impl)
+    state, aux, dropped, n_exec, halted = runner(_INPUTS, jnp.float32(0.0))
+    assert int(n_exec) == 3 and bool(halted)
+    assert float(state) == 3 * 8
+    np.testing.assert_array_equal(np.asarray(aux["round"]),
+                                  np.array([0, 1, 2, 0, 0, 0], np.uint32))
+    np.testing.assert_array_equal(np.asarray(aux["got"]),
+                                  np.array([8, 8, 8, 0, 0, 0], np.float32))
+    np.testing.assert_array_equal(np.asarray(dropped), np.zeros(6, np.int32))
+
+
+def test_halt_on_round0_executes_exactly_one_round():
+    """halt_fn True from the start still executes round 0 — exactly one
+    round's shuffle — and the chunk's masked tail is a no-op."""
+    spec = _counting_spec(halt_at=0)
+    res = run_until(spec, _INPUTS, jnp.float32(0.0), _mesh1(),
+                    max_rounds=8, min_chunk=4)
+    assert res.rounds_executed == 1 and res.halted
+    assert res.n_dispatches == 1 and res.rounds_dispatched == 4
+    assert float(res.state) == 8.0  # exactly one round's worth arrived
+    np.testing.assert_array_equal(res.aux["round"], np.array([0], np.uint32))
+    assert res.dropped.shape == (1,)
+
+
+def test_unhalted_spec_runs_budget_through_run_until():
+    """A spec without halt_fn is legal: run_until executes every round."""
+    spec = _counting_spec(halt_at=None)
+    res = run_until(spec, _INPUTS, jnp.float32(0.0), _mesh1(), max_rounds=5)
+    assert res.rounds_executed == res.rounds_dispatched == 5
+    assert not res.halted
+    np.testing.assert_array_equal(res.aux["round"], np.arange(5, dtype=np.uint32))
+
+
+# --- keystream accounting across chunks ---------------------------------------
+
+
+def test_early_exit_then_resume_keeps_round_indices_disjoint():
+    """An early-exited chunk followed by a resumed chunk covers a gapless,
+    duplicate-free global round range: the halted tail of chunk 1 consumed
+    no round indices (hence no keystream), and chunk 2 starts exactly at
+    rounds_executed."""
+    first = run_until(_counting_spec(halt_at=2), _INPUTS, jnp.float32(0.0), _mesh1(),
+                      max_rounds=8, min_chunk=8)
+    assert first.rounds_executed == 3 and first.rounds_dispatched == 8
+    second = run_until(_counting_spec(halt_at=5), _INPUTS, first.state, _mesh1(),
+                       max_rounds=8, round_offset=first.rounds_executed)
+    rounds = np.concatenate([first.aux["round"], second.aux["round"]])
+    np.testing.assert_array_equal(rounds, np.arange(6, dtype=np.uint32))
+    assert len(set(rounds.tolist())) == len(rounds)  # no counter reuse
+    assert float(second.state) == 6 * 8
+
+
+def test_executed_round_keystreams_disjoint_across_resumed_chunks():
+    """The keystream blocks of the rounds EXECUTED by an early-exited chunk
+    and its resumption never collide (two-time-pad check at the block level,
+    on the exact global round indices run_until hands each chunk)."""
+    cfg = _secure_cfg()
+    n_rows, blocks = 4, 2
+    n_words = blocks * 16
+    ids = jnp.arange(n_rows, dtype=jnp.uint32)
+    # chunk 1 executed global rounds 0..2, chunk 2 (offset 3) rounds 3..5
+    seen = set()
+    for rnd in (0, 1, 2, 3, 4, 5):
+        ks = shuffle._keystream_rows(
+            cfg, ids, ids, jnp.uint32(cfg.counter0), blocks, n_words, jnp.uint32(rnd))
+        for row in np.asarray(ks):
+            for block in row.reshape(-1, 16):
+                key = block.tobytes()
+                assert key not in seen, f"keystream block reused at round {rnd}"
+                seen.add(key)
+    assert len(seen) == 6 * n_rows * blocks
+
+
+def test_halted_rounds_move_zero_wire_bytes():
+    """Trace-time audit: the masked no-op branch records zero shuffle bytes
+    (it contains no all_to_all and derives no keystream)."""
+    spec = _counting_spec(halt_at=1)
+    with record_wire_bytes() as recs:
+        run_until(spec, _INPUTS, jnp.float32(0.0), _mesh1(),
+                  max_rounds=4, min_chunk=4, loop_impl="masked_scan")
+    live = [r for r in recs if not r["halted"]]
+    halted = [r for r in recs if r["halted"]]
+    assert len(live) == 1 and live[0]["bytes"] > 0  # scan traces one live round
+    assert halted, "halt-masked loop must trace a passthrough branch"
+    assert all(r["bytes"] == 0 for r in halted)
+
+
+# --- adaptive chunking --------------------------------------------------------
+
+
+def test_adaptive_chunks_grow_geometrically_and_cap():
+    """Chunks go min_chunk, xgrowth, ... capped at max_chunk and clipped to
+    the remaining budget; dispatched rounds follow."""
+    spec = _counting_spec(halt_at=None)
+    runners = {}
+    res = run_until(spec, _INPUTS, jnp.float32(0.0), _mesh1(), max_rounds=11,
+                    min_chunk=1, growth=2, max_chunk=4, runners=runners)
+    # 1 + 2 + 4 + 4 = 11 rounds in 4 dispatches; no 8-round program compiled
+    assert res.rounds_executed == res.rounds_dispatched == 11
+    assert res.n_dispatches == 4
+    assert sorted(runners) == [1, 2, 4]
+
+
+def test_runner_cache_reused_across_fits():
+    """A prebuilt kmeans runner cache serves multiple fits (shared jit)."""
+    mesh = _mesh1()
+    pts, _ = generate_points(512, 4, seed=2)
+    pts = jnp.asarray(pts)
+    lo, hi = jnp.min(pts, axis=0), jnp.max(pts, axis=0)
+    threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0
+    cache = make_kmeans_runner(mesh, 4, threshold=threshold, rounds_per_dispatch=4)
+    a = kmeans_fit(pts, 4, mesh, runner=cache, max_iter=32)
+    sizes_after_first = sorted(cache.runners)
+    b = kmeans_fit(pts, 4, mesh, runner=cache, max_iter=32)
+    assert sizes_after_first and sorted(cache.runners) == sizes_after_first
+    assert a.n_iter == b.n_iter
+    np.testing.assert_array_equal(np.asarray(a.centers), np.asarray(b.centers))
+
+
+def test_kmeans_runner_cache_without_threshold_rejected():
+    mesh = _mesh1()
+    pts, _ = generate_points(64, 2, seed=0)
+    cache = make_kmeans_runner(mesh, 2, rounds_per_dispatch=2)  # no threshold
+    with pytest.raises(ValueError, match="threshold"):
+        kmeans_fit(pts, 2, mesh, runner=cache)
+
+
+# --- overflow surfacing -------------------------------------------------------
+
+
+def test_overflow_warning_names_round_and_capacity():
+    n, capacity = 8, 4
+
+    def map_fn(state, inputs, r):
+        ks = jnp.arange(n, dtype=jnp.int32)
+        # only round 1 emits all n items (into one bucket of capacity 4)
+        valid = jnp.where(r == 1, jnp.ones_like(ks), (ks < capacity).astype(jnp.int32))
+        return jnp.where(valid > 0, 0, -1), {"v": jnp.ones((n,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        return state, {"r": r}
+
+    spec = IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=capacity, n_rounds=3)
+    with pytest.warns(RuntimeWarning, match=r"round 1: n_dropped=4.*capacity 4"):
+        run_iterative_mapreduce(spec, {"x": jnp.zeros((n,), jnp.float32)},
+                                jnp.float32(0.0), _mesh1())
+
+
+def test_overflow_warning_global_round_index_through_run_until():
+    """run_until warnings carry the GLOBAL round index, offset included."""
+
+    def map_fn(state, inputs, r):
+        ks = jnp.arange(6, dtype=jnp.int32)
+        keys = jnp.where(r == 12, jnp.zeros_like(ks), jnp.where(ks < 2, 0, -1))
+        return keys, {"v": jnp.ones((6,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        return state, {"r": r}
+
+    spec = IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=2, n_rounds=1)
+    with pytest.warns(RuntimeWarning, match=r"round 12: n_dropped=4"):
+        run_until(spec, {"x": jnp.zeros((6,), jnp.float32)}, jnp.float32(0.0),
+                  _mesh1(), max_rounds=4, round_offset=10)
+
+
+# --- workloads through run_until ---------------------------------------------
+
+
+def test_grep_max_matches_stops_stream_early():
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 8, 512).astype(np.int32)  # dense hits
+    pats = np.array([1, 3], np.int32)
+    full, per_round_full, _ = grep_count(toks, pats, _mesh1(), n_rounds=8)
+    limited, per_round, dropped = grep_count(toks, pats, _mesh1(), n_rounds=8,
+                                             max_matches=20)
+    assert per_round.shape[0] < 8  # stream stopped early
+    assert float(np.sum(np.asarray(limited))) >= 20
+    assert float(np.sum(np.asarray(limited))) <= float(np.sum(np.asarray(full)))
+    # executed prefix identical to the unlimited stream's rounds
+    np.testing.assert_array_equal(np.asarray(per_round),
+                                  np.asarray(per_round_full)[: per_round.shape[0]])
+
+
+def test_sample_sort_halts_when_balanced_and_lossless():
+    """A well-conditioned (uniform) input needs no refinement: the halt
+    fires on round 0 and the budget is untouched."""
+    rng = np.random.default_rng(1)
+    v = rng.uniform(0.0, 1.0, 256).astype(np.float32)
+    out, counts, dropped = sample_sort(v, _mesh1(), n_rounds=4, lo=0.0, hi=1.0)
+    np.testing.assert_array_equal(out, np.sort(v))
+    assert counts.sum() == 256
+    assert len(dropped) == 1  # halted after the first (already-balanced) round
+
+
+def test_run_mapreduce_until_engine_entry():
+    """engine-level entry: iterate a one-round MapReduce job, folding reduce
+    outputs into carried state, until the accumulated total crosses a bound."""
+    n = 16
+
+    def map_fn(keys, values):
+        return keys % 4, jnp.ones((n,), jnp.float32)
+
+    def reduce_fn(rk, rv, valid):
+        got = jnp.sum(jnp.where(valid, rv, 0.0))
+        return jax.lax.psum(got, "data")
+
+    spec = MapReduceSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=n)
+    res = run_mapreduce_until(
+        spec, jnp.arange(n, dtype=jnp.int32), jnp.zeros((n,), jnp.float32),
+        jnp.float32(0.0), _mesh1(),
+        halt_fn=lambda state, aux, r: state >= 40.0,
+        fold_fn=lambda state, out: state + out,
+        max_rounds=10,
+    )
+    # each round contributes 16; 3 rounds reach 48 >= 40
+    assert res.rounds_executed == 3 and res.halted
+    assert float(res.state) == 48.0
+    np.testing.assert_array_equal(res.aux, np.full((3,), 16.0, np.float32))
+
+
+# --- secure mode --------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_secure_run_until_bitexact_vs_secure_loop():
+    """Secure fused early exit == secure per-round loop stopped at the same
+    round, bit-for-bit — and the resumed chunk continues the keystream."""
+    mesh = _mesh1()
+    cfg = _secure_cfg()
+    pts, _ = generate_points(256, 4, seed=5, spread=0.04)
+    pts = jnp.asarray(pts)
+    lo, hi = jnp.min(pts, axis=0), jnp.max(pts, axis=0)
+    threshold = float(jnp.linalg.norm(hi - lo)) / 1000.0
+
+    step = make_kmeans_step(mesh, secure=cfg)
+    w = jnp.ones((pts.shape[0],), jnp.float32)
+    c_loop = pts[:4]
+    for it in range(1, 33):
+        c_loop, s = step(pts, w, c_loop)
+        if np.float32(s) < np.float32(threshold):
+            break
+
+    res = kmeans_fit(pts, 4, mesh, secure=cfg, threshold=threshold, max_iter=32,
+                     rounds_per_dispatch=4)
+    assert res.n_iter == it
+    np.testing.assert_array_equal(np.asarray(res.centers), np.asarray(c_loop))
+    assert res.n_dispatches < res.n_iter or res.n_iter <= 2
+
+
+@pytest.mark.slow
+def test_secure_halt_round0_single_round_shuffle():
+    """halt on round 0 in secure mode == exactly one secure round's output."""
+    mesh = _mesh1()
+    cfg = _secure_cfg()
+    spec1 = make_kmeans_iterative_spec(4, 1, n_rounds=1)
+    pts, _ = generate_points(128, 4, seed=8)
+    inputs = {"p": jnp.asarray(pts), "w": jnp.ones((128,), jnp.float32)}
+    c0 = jnp.asarray(pts[:4])
+    ref, _, _ = run_iterative_mapreduce(spec1, inputs, c0, mesh, secure=cfg)
+
+    halt_spec = make_kmeans_iterative_spec(4, 1, threshold=float("inf"))
+    res = run_until(halt_spec, inputs, c0, mesh, secure=cfg,
+                    max_rounds=6, min_chunk=3)
+    assert res.rounds_executed == 1 and res.halted and res.n_dispatches == 1
+    np.testing.assert_array_equal(np.asarray(res.state), np.asarray(ref))

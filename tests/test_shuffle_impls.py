@@ -189,6 +189,24 @@ def test_impl_resolution_env_and_explicit(monkeypatch):
         resolve_chacha_impl("vulkan")
 
 
+def test_invalid_env_impl_error_names_the_env_var(monkeypatch):
+    """A bad $REPRO_CHACHA_IMPL must be called out as coming from the
+    environment (a generic message sends users hunting through code for a
+    value they never passed)."""
+    monkeypatch.setenv(CHACHA_IMPL_ENV, "vulkan")
+    with pytest.raises(ValueError, match=rf"\${CHACHA_IMPL_ENV}='vulkan'"):
+        resolve_chacha_impl("auto")
+    # env value 'auto' is also invalid (it cannot self-resolve) and env-blamed
+    monkeypatch.setenv(CHACHA_IMPL_ENV, "auto")
+    with pytest.raises(ValueError, match=rf"\${CHACHA_IMPL_ENV}"):
+        resolve_chacha_impl("auto")
+    # an explicit bad impl is NOT blamed on the environment
+    monkeypatch.delenv(CHACHA_IMPL_ENV, raising=False)
+    with pytest.raises(ValueError) as ei:
+        resolve_chacha_impl("vulkan")
+    assert CHACHA_IMPL_ENV not in str(ei.value)
+
+
 def test_with_impl_override():
     cfg = _cfg("auto")
     assert cfg.with_impl(None) is cfg
