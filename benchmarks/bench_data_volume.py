@@ -60,7 +60,11 @@ def run():
     # --- per-round shuffle bytes through the iterative driver ----------------
     # A shuffle inside the driver's lax.scan traces ONCE, so each run below
     # records a single per-round byte count (fixed shapes => every round
-    # moves the same volume).
+    # moves the same volume). Secure mode is measured under BOTH wire
+    # layouts: the coalesced single-wire default and the per-leaf oracle —
+    # the per-leaf byte breakdown in each record proves zero CTR ciphertext
+    # expansion LEAF BY LEAF even after coalescing (the coalesced wire's
+    # only extra bytes are its ≤15-word/leaf block-alignment pad).
     mesh = make_mesh((1,), ("data",))
     n, k, n_rounds = 2048, 8, 2
     pts, _ = generate_points(n, k, seed=6)
@@ -71,17 +75,30 @@ def run():
                               nonce_words=chacha.nonce_to_words(b"\x0b" * 12))
     with record_wire_bytes() as recs:
         run_iterative_mapreduce(spec, inputs, c0, mesh)
-        run_iterative_mapreduce(spec, inputs, c0, mesh, secure=sec)
+        run_iterative_mapreduce(spec, inputs, c0, mesh, secure=sec,
+                                coalesce=True)
+        run_iterative_mapreduce(spec, inputs, c0, mesh, secure=sec,
+                                coalesce=False)
     plain = [r for r in recs if not r["secure"]]
     secure = [r for r in recs if r["secure"]]
-    assert len(plain) == 1 and len(secure) == 1, recs
-    assert secure[0]["bytes"] == plain[0]["bytes"], (
-        f"CTR must not expand the shuffle wire: secure={secure[0]['bytes']}B "
-        f"plain={plain[0]['bytes']}B"
-    )
+    assert len(plain) == 1 and len(secure) == 2, recs
+    coalesced = [r for r in secure if r["coalesced"]]
+    per_leaf = [r for r in secure if not r["coalesced"]]
+    assert len(coalesced) == 1 and len(per_leaf) == 1, recs
+    for rec in secure:
+        assert rec["bytes"] == plain[0]["bytes"], (
+            f"CTR must not expand the shuffle wire: secure={rec['bytes']}B "
+            f"plain={plain[0]['bytes']}B (coalesced={rec['coalesced']})"
+        )
+        # leaf-by-leaf: every leaf's payload equals its plaintext bytes
+        assert rec["per_leaf"] == plain[0]["per_leaf"], (rec, plain[0])
+    assert coalesced[0]["collectives"] == 1, coalesced
+    assert per_leaf[0]["collectives"] == per_leaf[0]["leaves"], per_leaf
     rows.append((
         "driver_shuffle_bytes_per_round", 0.0,
-        f"plain={plain[0]['bytes']}B,secure={secure[0]['bytes']}B,"
-        f"rounds={n_rounds},expansion=0B",
+        f"plain={plain[0]['bytes']}B,secure={coalesced[0]['bytes']}B,"
+        f"rounds={n_rounds},expansion=0B,"
+        f"coalesce_pad={coalesced[0]['pad_bytes']}B,"
+        f"per_leaf={','.join(str(b) for b in coalesced[0]['per_leaf'])}",
     ))
     return rows

@@ -7,6 +7,8 @@
   bench_data_volume     Table II   split/shuffle/output bytes per iteration
   bench_tcb             Table I    trusted-code-base sizes (+ <30 LOC scripts)
   bench_crypto          cipher throughput (the boundary tax primitive)
+  bench_shuffle         coalesced vs per-leaf secure shuffle wire
+                        (collectives/launches/bytes/time per round)
   bench_roofline        §Roofline terms from the dry-run report
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -14,9 +16,12 @@ Prints ``name,us_per_call,derived`` CSV.
 Machine-readable perf trajectory: driver-path metrics (compile time,
 steady-state per-iteration time per keystream impl, rounds executed vs
 dispatched, shuffle wire bytes) are serialized to ``BENCH_driver.json`` —
-modules publish them via a module-level ``LAST_METRICS`` dict. CI runs
-``run.py --smoke`` (reduced sizes, driver-relevant modules only) and uploads
-the JSON as an artifact so regressions are visible across PRs.
+modules publish them via a module-level ``LAST_METRICS`` dict — and the
+secure-shuffle wire metrics (collectives + keystream launches per round,
+bytes, coalesced vs per-leaf steady state; ``bench_shuffle``) additionally
+to ``BENCH_shuffle.json``. CI runs ``run.py --smoke`` (reduced sizes,
+driver-relevant modules only) and uploads both JSONs as artifacts so
+regressions are visible across PRs.
 """
 
 import argparse
@@ -36,6 +41,7 @@ from benchmarks import (
     bench_overhead,
     bench_paging,
     bench_roofline,
+    bench_shuffle,
     bench_tcb,
 )
 
@@ -44,14 +50,15 @@ MODULES = [
     bench_crypto,
     bench_convergence,
     bench_iteration_time,
+    bench_shuffle,
     bench_paging,
     bench_overhead,
     bench_data_volume,
     bench_roofline,
 ]
 
-# the modules exercised by the CI smoke lane: the driver hot path only
-SMOKE_MODULES = [bench_iteration_time]
+# the modules exercised by the CI smoke lane: the driver + shuffle hot paths
+SMOKE_MODULES = [bench_iteration_time, bench_shuffle]
 
 
 def _run_module(mod, smoke: bool):
@@ -69,6 +76,8 @@ def main(argv=None) -> None:
                     help="reduced sizes, driver-relevant modules only (CI lane)")
     ap.add_argument("--json-out", default="BENCH_driver.json",
                     help="path for the machine-readable driver metrics")
+    ap.add_argument("--shuffle-json-out", default="BENCH_shuffle.json",
+                    help="path for the machine-readable shuffle-wire metrics")
     args = ap.parse_args(argv)
 
     modules = SMOKE_MODULES if args.smoke else MODULES
@@ -95,6 +104,16 @@ def main(argv=None) -> None:
     with open(args.json_out, "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
     print(f"wrote {args.json_out}", file=sys.stderr)
+    # the shuffle-wire trajectory gets its own artifact: the acceptance
+    # numbers (collectives + keystream launches per secure round, bytes,
+    # coalesced vs per-leaf timing) live here
+    if bench_shuffle in modules:
+        shuffle_metrics = {k: metrics[k] for k in
+                           ("schema", "smoke", "backend", "platform", "jax")}
+        shuffle_metrics["shuffle"] = getattr(bench_shuffle, "LAST_METRICS", {})
+        with open(args.shuffle_json_out, "w") as f:
+            json.dump(shuffle_metrics, f, indent=2, sort_keys=True)
+        print(f"wrote {args.shuffle_json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

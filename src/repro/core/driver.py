@@ -294,14 +294,27 @@ def make_iterative_runner(
     secure: SecureShuffleConfig | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
+    donate_state: bool = False,
 ):
     """Build the jitted fused-round function once; call it many times.
 
     `chacha_impl` overrides the secure config's keystream backend
     ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`) — baked
     in at build time, since the impl choice is part of the traced program.
-    `loop_impl` selects the halt-aware loop shape (`HALT_LOOP_IMPLS`;
-    only meaningful when `spec.halt_fn` is set).
+    `coalesce` overrides the secure wire layout the same way (True — one
+    keystream launch each side of ONE all_to_all per round — False — the
+    per-leaf oracle; None keeps the config's own setting). `loop_impl` selects the
+    halt-aware loop shape (`HALT_LOOP_IMPLS`; only meaningful when
+    `spec.halt_fn` is set).
+
+    `donate_state=True` donates the carried-state argument's buffers to the
+    dispatch (`jax.jit` donate_argnums): XLA writes the chunk's final state
+    into the input's storage instead of allocating a fresh replica every
+    dispatch — the natural fit for `run_until`'s chunk loop, which always
+    feeds a chunk's output state into the next chunk. CALLERS OWN THE
+    ALIASING CONTRACT: the state passed in is consumed (its buffers are
+    deleted) and must not be reused after the call.
 
     Returns fn(inputs, state, round_offset=0) ->
       (final_state, aux_per_round, dropped_per_round)                  and,
@@ -324,7 +337,7 @@ def make_iterative_runner(
     recompiles.
     """
     if secure is not None:
-        secure = secure.with_impl(chacha_impl)
+        secure = secure.with_impl(chacha_impl).with_coalesce(coalesce)
     n_shards = mesh.shape[axis_name]
     trace_info: dict = {}
     if spec.halt_fn is not None:
@@ -357,12 +370,16 @@ def make_iterative_runner(
         )
         return fn(inputs, state, jnp.asarray(round_offset, jnp.uint32))
 
-    jitted = jax.jit(run)
+    # arg 1 is the carried state: its output has identical shapes/dtypes, so
+    # donation lets XLA alias the buffers instead of re-allocating per chunk
+    jitted = jax.jit(run, donate_argnums=(1,) if donate_state else ())
 
     def runner(inputs, state, round_offset=0):
         return jitted(inputs, state, round_offset)
 
     runner.trace_info = trace_info
+    runner.abstract_fn = run  # un-jitted body, for make_jaxpr inspection
+    runner.jitted = jitted  # exposes .lower() for donation/lowering audits
     return runner
 
 
@@ -401,6 +418,7 @@ def run_iterative_mapreduce(
     round_offset: int = 0,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
     warn_on_overflow: bool = True,
 ):
     """One-shot convenience: run `spec.n_rounds` fused rounds over
@@ -408,7 +426,8 @@ def run_iterative_mapreduce(
     `init_state` is replicated carried state. `round_offset`: see
     `make_iterative_runner` — pass the count of rounds already executed
     when continuing a job across dispatches. `chacha_impl` selects the
-    secure keystream backend (see `core/shuffle.py`).
+    secure keystream backend and `coalesce` the secure wire layout (see
+    `core/shuffle.py`).
 
     Returns (final_state, aux_per_round, dropped_per_round) — dropped has
     shape (n_rounds,) and must be all-zero for a lossless job — plus
@@ -418,7 +437,8 @@ def run_iterative_mapreduce(
     expected phase of the job).
     """
     runner = make_iterative_runner(spec, mesh, axis_name, secure,
-                                   chacha_impl=chacha_impl, loop_impl=loop_impl)
+                                   chacha_impl=chacha_impl, loop_impl=loop_impl,
+                                   coalesce=coalesce)
     out = runner(inputs, init_state, round_offset)
     if warn_on_overflow:
         dropped = out[2]
@@ -472,6 +492,8 @@ def run_until(
     max_chunk: int | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
+    donate_state: bool = True,
     runners: dict | None = None,
     warn_on_overflow: bool = True,
 ) -> RunUntilResult:
@@ -495,10 +517,18 @@ def run_until(
     without `halt_fn` is allowed: the job simply runs all `max_rounds`
     rounds (useful to share this entry point across workloads).
 
+    `donate_state` (default True) donates each dispatch's carried-state
+    buffers: the chunk loop always feeds a chunk's output state into the
+    next chunk, so XLA can write the new state into the old one's storage
+    instead of re-allocating it every dispatch. The caller's `init_state`
+    is protected by ONE defensive device copy up front (donation would
+    otherwise delete the caller's buffers on the first chunk); every
+    subsequent dispatch re-uses storage with zero copies.
+
     `runners`: optional mutable dict mapping chunk size -> runner, reused
     across calls to amortize XLA compiles. Callers own its validity: it must
     have been populated with the SAME spec (sans n_rounds) / mesh / secure /
-    impl arguments.
+    impl / donation arguments.
     """
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
@@ -508,6 +538,11 @@ def run_until(
     runners = {} if runners is None else runners
 
     state = init_state
+    if donate_state:
+        # one up-front copy shields the caller's init_state buffers from the
+        # first chunk's donation; all later chunks donate run_until's own
+        # output state, which nothing else holds
+        state = jax.tree.map(lambda x: jnp.array(x, copy=True), init_state)
     executed = dispatched = n_dispatches = 0
     halted = False
     aux_chunks: list = []
@@ -519,7 +554,8 @@ def run_until(
         if runner is None:
             runner = runners[n] = make_iterative_runner(
                 replace(spec, n_rounds=n), mesh, axis_name, secure,
-                chacha_impl=chacha_impl, loop_impl=loop_impl)
+                chacha_impl=chacha_impl, loop_impl=loop_impl,
+                coalesce=coalesce, donate_state=donate_state)
         out = runner(inputs, state, round_offset + executed)
         if spec.halt_fn is None:
             state, aux, dropped = out

@@ -87,18 +87,21 @@ def run_mapreduce(
     secure: SecureShuffleConfig | None = None,
     out_specs=P(),
     chacha_impl: str | None = None,
+    coalesce: bool | None = None,
 ):
     """Run the pipeline over `mesh[axis_name]`. Inputs are host-global arrays
     sharded on their leading dim; output spec defaults to replicated (the
     usual case: reduce_fn ends in a psum/all_gather).
 
     `chacha_impl` overrides the secure config's keystream backend
-    ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`).
+    ('pallas' | 'pallas-interpret' | 'jnp') and `coalesce` its wire layout
+    (True — single coalesced wire, one all_to_all — False — per-leaf
+    oracle; see `core/shuffle.py`).
 
     Returns (output, n_dropped) — n_dropped must be 0 for a lossless job.
     """
     if secure is not None:
-        secure = secure.with_impl(chacha_impl)
+        secure = secure.with_impl(chacha_impl).with_coalesce(coalesce)
     n_shards = mesh.shape[axis_name]
     body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards, secure=secure)
     in_specs = (P(axis_name), compat.tree_map(lambda _: P(axis_name), values))
@@ -122,6 +125,7 @@ def run_mapreduce_until(
     secure: SecureShuffleConfig | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
     min_chunk: int = 1,
     growth: int = 2,
     max_chunk: int | None = None,
@@ -165,5 +169,5 @@ def run_mapreduce_until(
         ispec, {"k": keys, "v": values}, init_state, mesh, axis_name,
         secure=secure, max_rounds=max_rounds, min_chunk=min_chunk,
         growth=growth, max_chunk=max_chunk, chacha_impl=chacha_impl,
-        loop_impl=loop_impl,
+        loop_impl=loop_impl, coalesce=coalesce,
     )

@@ -80,6 +80,7 @@ def grep_count(
     max_matches: int | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
 ):
     """Count occurrences of each pattern token in `tokens` (int32, sharded).
 
@@ -117,6 +118,6 @@ def grep_count(
     res = run_until(
         spec, {"t": tokens}, init, mesh, axis_name, secure=secure,
         max_rounds=n_rounds, min_chunk=min_chunk,
-        chacha_impl=chacha_impl, loop_impl=loop_impl,
+        chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
     )
     return res.state, res.aux["round_hits"], res.dropped

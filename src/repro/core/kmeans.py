@@ -100,14 +100,15 @@ def _kmeans_shard_step(points, weights, centers, *, axis_name, n_shards, secure,
 
 
 def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleConfig | None = None,
-                     impl: str = "jnp", chacha_impl: str | None = None):
+                     impl: str = "jnp", chacha_impl: str | None = None,
+                     coalesce: bool | None = None):
     """Build the jitted one-iteration function over `mesh` (oracle path).
 
     `impl` selects the assignment kernel; `chacha_impl` the secure-shuffle
-    keystream backend (see `core/shuffle.py`).
+    keystream backend and `coalesce` its wire layout (see `core/shuffle.py`).
     """
     if secure is not None:
-        secure = secure.with_impl(chacha_impl)
+        secure = secure.with_impl(chacha_impl).with_coalesce(coalesce)
     n_shards = mesh.shape[axis_name]
     body = partial(
         _kmeans_shard_step,
@@ -188,6 +189,7 @@ class KMeansRunnerCache:
     max_chunk: int
     threshold: float | None
     min_chunk: int = 1
+    coalesce: bool | None = None
     runners: dict = field(default_factory=dict)
 
 
@@ -195,7 +197,8 @@ def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
                        secure: SecureShuffleConfig | None = None, impl: str = "jnp",
                        rounds_per_dispatch: int = 8, threshold: float | None = None,
                        min_chunk: int = 1, chacha_impl: str | None = None,
-                       loop_impl: str | None = None) -> KMeansRunnerCache:
+                       loop_impl: str | None = None,
+                       coalesce: bool | None = None) -> KMeansRunnerCache:
     """Prebuild the convergence-aware runner cache for `kmeans_fit`.
 
     `threshold` bakes the paper's §V stopping rule into the on-device
@@ -205,14 +208,14 @@ def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
     max_chunk); `min_chunk` sets the first chunk's size (larger values
     amortize more rounds per dispatch up front at the cost of more masked
     no-op rounds when convergence is very fast). `chacha_impl` selects the
-    secure keystream backend (see `core/shuffle.py`); `loop_impl` the
-    halt-loop shape (`core/driver.py`).
+    secure keystream backend and `coalesce` the secure wire layout (see
+    `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`).
     """
     spec = make_kmeans_iterative_spec(k, mesh.shape[axis_name], impl=impl,
                                       axis_name=axis_name, threshold=threshold)
     return KMeansRunnerCache(
         spec=spec, mesh=mesh, axis_name=axis_name, secure=secure,
-        chacha_impl=chacha_impl, loop_impl=loop_impl,
+        chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
         max_chunk=max(1, rounds_per_dispatch), threshold=threshold,
         min_chunk=max(1, min_chunk),
     )
@@ -236,6 +239,7 @@ def kmeans_fit(
     runner: KMeansRunnerCache | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
 ) -> KMeansResult:
     """Iterate to convergence. threshold=None -> paper's diag/1000 rule.
 
@@ -254,9 +258,9 @@ def kmeans_fit(
     keystream disjoint across dispatches. `runner`: a prebuilt
     `make_kmeans_runner(...)` cache to reuse its jit cache across fits
     (must match k/mesh/secure/impl/threshold; its baked-in threshold wins).
-    `chacha_impl` selects the secure keystream backend (see
-    `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`);
-    both ignored when `runner` is supplied.
+    `chacha_impl` selects the secure keystream backend and `coalesce` the
+    secure wire layout (see `core/shuffle.py`); `loop_impl` the halt-loop
+    shape (`core/driver.py`); all three ignored when `runner` is supplied.
     """
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -278,7 +282,7 @@ def kmeans_fit(
             mesh, k, axis_name=axis_name, secure=secure, impl=impl,
             rounds_per_dispatch=max(1, min(rounds_per_dispatch, max_iter)),
             threshold=threshold, min_chunk=min_chunk,
-            chacha_impl=chacha_impl, loop_impl=loop_impl,
+            chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
         )
     elif runner.threshold is None:
         raise ValueError(
@@ -291,7 +295,8 @@ def kmeans_fit(
         runner.spec, inputs, centers, runner.mesh, runner.axis_name,
         secure=runner.secure, max_rounds=max_iter, max_chunk=runner.max_chunk,
         min_chunk=runner.min_chunk, chacha_impl=runner.chacha_impl,
-        loop_impl=runner.loop_impl, runners=runner.runners,
+        loop_impl=runner.loop_impl, coalesce=runner.coalesce,
+        runners=runner.runners,
     )
     centers = jnp.asarray(res.state)
     shifts = [float(s) for s in np.asarray(res.aux["shift"])]

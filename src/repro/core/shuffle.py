@@ -25,17 +25,56 @@ nonce word 1 gives every round a disjoint keystream while both endpoints of
 the collective can still derive it locally — the round counter is part of
 the shared loop state, never transmitted.
 
+Coalesced wire layout (default)
+-------------------------------
+The whole pytree crosses the boundary as ONE (R, 16·total_blocks) u32 wire:
+every leaf's word rows, padded up to its own ChaCha-block multiple, are
+concatenated on the word axis at STATIC per-leaf offsets, so one keystream
+launch encrypts/decrypts the buffer and exactly one `lax.all_to_all` moves
+it — per secure round, regardless of tree width (vs one collective per leaf
+and two launches per leaf on the per-leaf path). For a 3-leaf tree
+{k:(R,C) i32, s:(R,C,d) f32, c:(R,C) f32}:
+
+    wire row i:  |<- leaf k ->|<--- leaf s --->|<- leaf c ->|
+    words        [ Wk | pad ]  [  Ws   | pad ]  [ Wc | pad ]
+    word offset  0            16·Bk             16·(Bk+Bs)
+    block ctr    c0+i·Bk+b     c0+R·Bk+i·Bs+b    c0+R·(Bk+Bs)+i·Bc+b
+
+where W* = words_for(leaf row), B* = ceil(W*/16), b the intra-leaf block
+index, and c0 = counter0. Each leaf segment keeps the EXACT per-leaf
+counter assignment (leaf_offset + row·blocks_per_row + b), so the coalesced
+and per-leaf layouts draw bit-identical keystream per leaf region — they
+are cross-checkable ciphertexts, and the per-leaf path is retained as the
+differential oracle (`SecureShuffleConfig.coalesce=False`). The ≤15-word
+block-alignment pad per leaf carries encrypted zeros, i.e. raw keystream
+tail words of blocks whose payload words are already on the wire; those
+words were derived and discarded by the per-leaf path too, and CTR keystream
+words leak nothing about other words of the same or any other block.
+
+The per-(row, block) counter of the coalesced wire is not a single linear
+ramp, so `kernels/chacha20.chacha20_xor_rows_coalesced` takes vector
+per-block counter bases: ctr[i, j] = ctr_base[j] + ctr_rowmul[j] · row_ctr[i]
+with ctr_base = leaf counter offset + intra-leaf block index and ctr_rowmul
+= the leaf's blocks-per-row stride.
+
+`SecureShuffleConfig.coalesce` selects the layout: True | False | 'auto'
+(the default — reads $REPRO_SHUFFLE_COALESCE, else True). Like `impl`, the
+choice is read at trace time and an explicit bool always wins over the
+environment.
+
 Keystream implementation selection
 ----------------------------------
 Two interchangeable backends compute the per-row keystream; the counter-space
 layout above is IDENTICAL under both, so they are bit-exact by construction
 (and proven so by `tests/test_shuffle_impls.py`):
 
-  * ``pallas`` (default) — `repro.kernels.chacha20.chacha20_xor_rows`: the
-    whole (R, n_words) wire buffer in one Pallas launch gridded over
-    rows × block tiles. Interpret mode off-TPU keeps XLA from constant-
-    folding the 20-round ARX chain, which is what made secure-mode compiles
-    take ~40-110s per config on the historical path.
+  * ``pallas`` (default) — `repro.kernels.chacha20.chacha20_xor_rows` /
+    `chacha20_xor_rows_coalesced`: the whole wire buffer in one Pallas
+    launch gridded over rows × 128-wide block-LANE tiles (blocks on the
+    lane dim, so the compiled TPU lowering fills every VREG lane).
+    Interpret mode off-TPU keeps XLA from constant-folding the 20-round
+    ARX chain, which is what made secure-mode compiles take ~40-110s per
+    config on the historical path.
   * ``jnp`` — the vmapped pure-jnp ChaCha, kept as the differential-testing
     oracle.
 
@@ -55,24 +94,60 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.crypto import ctr as _ctr
-from repro.crypto.chacha import chacha20_keystream_words
+from repro.crypto.chacha import chacha20_block_words, chacha20_keystream_words
 from repro.crypto.ctr import words_for
 
 try:  # the Pallas frontend may be absent on exotic platforms
-    from repro.kernels.chacha20.ops import chacha20_xor_rows, make_state0
+    from repro.kernels.chacha20.ops import (
+        chacha20_xor_rows,
+        chacha20_xor_rows_coalesced,
+        make_state0,
+    )
 
     _HAVE_PALLAS = True
 except ImportError:  # pragma: no cover - exercised only without Pallas
-    chacha20_xor_rows = make_state0 = None
+    chacha20_xor_rows = chacha20_xor_rows_coalesced = make_state0 = None
     _HAVE_PALLAS = False
 
 CHACHA_IMPL_ENV = "REPRO_CHACHA_IMPL"
 _VALID_IMPLS = ("auto", "pallas", "pallas-interpret", "jnp")
+
+COALESCE_ENV = "REPRO_SHUFFLE_COALESCE"
+_COALESCE_TRUE = ("1", "true", "yes", "on")
+_COALESCE_FALSE = ("0", "false", "no", "off")
+
+
+def resolve_coalesce(coalesce="auto") -> bool:
+    """Resolve a coalesce selector to a concrete bool (read at trace time).
+
+    An explicit bool always wins; 'auto'/None defers to
+    $REPRO_SHUFFLE_COALESCE (default True). Mirrors `resolve_chacha_impl`,
+    including blaming the environment when its value is unparseable.
+    """
+    if isinstance(coalesce, (bool, np.bool_)):
+        return bool(coalesce)
+    if coalesce in (None, "auto"):
+        env_val = os.environ.get(COALESCE_ENV)
+        if env_val is None:
+            return True
+        val = env_val.strip().lower()
+        if val in _COALESCE_TRUE:
+            return True
+        if val in _COALESCE_FALSE:
+            return False
+        raise ValueError(
+            f"invalid ${COALESCE_ENV}={env_val!r} in the environment: "
+            f"must be one of {_COALESCE_TRUE + _COALESCE_FALSE} "
+            f"(unset ${COALESCE_ENV} to use the default coalesced wire)")
+    raise ValueError(
+        f"coalesce must be a bool or 'auto', got {coalesce!r}")
 
 
 def resolve_chacha_impl(impl: str = "auto") -> tuple[str, bool]:
@@ -111,12 +186,17 @@ class SecureShuffleConfig:
 
     `impl` picks the keystream backend (module docstring): 'auto' (env-
     overridable, default 'pallas'), 'pallas', 'pallas-interpret', or 'jnp'.
+    `coalesce` picks the wire layout (module docstring): True — the whole
+    pytree as one wire buffer, one keystream launch each side of ONE
+    all_to_all per round — False — the per-leaf differential oracle — or
+    'auto' (env-overridable via $REPRO_SHUFFLE_COALESCE, default True).
     """
 
     key_words: Any  # (8,) u32
     nonce_words: Any  # (3,) u32 base nonce; word 0 is XORed with source index
     counter0: int = 0
     impl: str = "auto"
+    coalesce: Any = "auto"  # bool | 'auto'
 
     def with_impl(self, impl: str | None) -> "SecureShuffleConfig":
         """Copy with a different keystream impl (None keeps the current one)."""
@@ -125,6 +205,14 @@ class SecureShuffleConfig:
         from dataclasses import replace
 
         return replace(self, impl=impl)
+
+    def with_coalesce(self, coalesce) -> "SecureShuffleConfig":
+        """Copy with a different wire layout (None keeps the current one)."""
+        if coalesce is None or coalesce == self.coalesce:
+            return self
+        from dataclasses import replace
+
+        return replace(self, coalesce=coalesce)
 
 
 def bucket_pack(keys, bucket, values, n_buckets: int, capacity: int,
@@ -159,6 +247,13 @@ def bucket_pack(keys, bucket, values, n_buckets: int, capacity: int,
     n_dropped = jnp.sum((b_sorted < n_buckets) & (pos >= capacity)).astype(jnp.int32)
 
     def scatter(x_sorted, fill):
+        if any(d == 0 for d in x_sorted.shape[1:]):
+            # Zero-size trailing dims (e.g. a (n, 0) per-item leaf): the
+            # n_buckets*capacity+1 overflow-slot scatter below degenerates —
+            # there are no elements to place, only shapes to produce — so
+            # return the empty fixed-shape buffer directly instead of
+            # emitting a 0-element XLA scatter.
+            return jnp.zeros((n_buckets, capacity) + x_sorted.shape[1:], x_sorted.dtype)
         out = jnp.full((n_buckets * capacity + 1,) + x_sorted.shape[1:], fill, x_sorted.dtype)
         out = out.at[dest].set(x_sorted)
         return out[:-1].reshape((n_buckets, capacity) + x_sorted.shape[1:])
@@ -266,6 +361,119 @@ def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows, round_id=None):
     return out
 
 
+@dataclass(frozen=True)
+class _WireLayout:
+    """Static unpack/counter metadata for a coalesced (R, 16·B) wire.
+
+    leaves:      per-leaf (shape, dtype, narrow-pad, word_start, n_words,
+                 blocks) tuples — word_start is the leaf segment's offset on
+                 the wire's word axis (always a block boundary).
+    ctr_base:    (total_blocks,) u32 — per-block counter base: the leaf's
+                 counter-space offset (Σ preceding blocks·R, matching the
+                 per-leaf path) + the intra-leaf block index. cfg.counter0
+                 is added at crypt time.
+    ctr_rowmul:  (total_blocks,) u32 — per-block row stride: the owning
+                 leaf's blocks-per-row.
+    """
+
+    leaves: tuple
+    ctr_base: Any  # (total_blocks,) np.uint32
+    ctr_rowmul: Any  # (total_blocks,) np.uint32
+    total_blocks: int
+
+    @property
+    def total_words(self) -> int:
+        return self.total_blocks * 16
+
+    @property
+    def payload_words(self) -> int:
+        return sum(m[4] for m in self.leaves)
+
+
+def _pack_wire_coalesced(tree):
+    """Bitcast + concatenate the whole pytree into ONE (R, 16·B) u32 wire.
+
+    Each leaf's word rows are padded up to the leaf's own ChaCha-block
+    multiple (so every leaf segment starts at a block boundary and draws
+    the same keystream blocks as the per-leaf path) and concatenated on the
+    word axis at static offsets. Returns (wire, layout, treedef); the
+    layout carries the per-block counter vectors of the module docstring.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    r = leaves[0].shape[0]
+    segs, meta = [], []
+    word_off = 0  # wire word offset (block-aligned by construction)
+    ctr_off = 0  # counter-space offset: Σ preceding blocks · R
+    base_parts, mul_parts = [], []
+    for leaf in leaves:
+        pad = _ctr.pad_for(leaf.shape[1:], leaf.dtype)
+        words = jax.vmap(lambda row: _ctr._to_words(row)[0])(leaf)
+        n_words = words.shape[1]
+        blocks = -(-n_words // 16)
+        tail = blocks * 16 - n_words
+        if tail:
+            words = jnp.concatenate(
+                [words, jnp.zeros((r, tail), jnp.uint32)], axis=1)
+        segs.append(words)
+        meta.append((leaf.shape, leaf.dtype, pad, word_off, n_words, blocks))
+        base_parts.append(np.uint32(ctr_off) + np.arange(blocks, dtype=np.uint32))
+        mul_parts.append(np.full((blocks,), blocks, np.uint32))
+        word_off += blocks * 16
+        ctr_off += blocks * r
+    wire = (jnp.concatenate(segs, axis=1) if segs
+            else jnp.zeros((r, 0), jnp.uint32))
+    layout = _WireLayout(
+        leaves=tuple(meta),
+        ctr_base=(np.concatenate(base_parts) if base_parts
+                  else np.zeros((0,), np.uint32)),
+        ctr_rowmul=(np.concatenate(mul_parts) if mul_parts
+                    else np.zeros((0,), np.uint32)),
+        total_blocks=word_off // 16,
+    )
+    return wire, layout, treedef
+
+
+def _unpack_wire_coalesced(wire, layout: _WireLayout, treedef):
+    leaves = []
+    for shape, dtype, pad, word_start, n_words, _blocks in layout.leaves:
+        words = lax.slice_in_dim(wire, word_start, word_start + n_words, axis=1)
+        leaves.append(
+            jax.vmap(lambda w: _ctr._from_words(w, shape[1:], dtype, pad))(words))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _crypt_wire_coalesced(wire, layout: _WireLayout, cfg, nonce_ids, ctr_rows,
+                          round_id=None):
+    """XOR the whole coalesced wire with its keystream in ONE launch.
+
+    Block j of row i uses counter counter0 + ctr_base[j] + ctr_rowmul[j] ·
+    ctr_rows[i] and nonce word 0 XOR nonce_ids[i] — bit-identical per leaf
+    region to what `_crypt_wires` derives on the per-leaf path.
+    """
+    if layout.total_blocks == 0:
+        return wire
+    nonce_ids = jnp.asarray(nonce_ids, jnp.uint32)
+    ctr_rows = jnp.asarray(ctr_rows, jnp.uint32)
+    ctr_base = jnp.uint32(cfg.counter0) + jnp.asarray(layout.ctr_base, jnp.uint32)
+    ctr_rowmul = jnp.asarray(layout.ctr_rowmul, jnp.uint32)
+    base_nonce = _round_nonce(cfg, round_id)
+    if _HAVE_PALLAS:
+        impl, interpret = resolve_chacha_impl(cfg.impl)
+        state0 = make_state0(cfg.key_words, base_nonce, 0)
+        return chacha20_xor_rows_coalesced(wire, state0, nonce_ids, ctr_rows,
+                                           ctr_base, ctr_rowmul,
+                                           impl=impl, interpret=interpret)
+
+    key_words = jnp.asarray(cfg.key_words, jnp.uint32)  # pragma: no cover
+
+    def one(row, nid, rc):  # pragma: no cover - exercised only without Pallas
+        nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
+        counters = ctr_base + ctr_rowmul * rc
+        return row ^ chacha20_block_words(key_words, counters, nonce).reshape(-1)
+
+    return jax.vmap(one)(wire, nonce_ids, ctr_rows)  # pragma: no cover
+
+
 class _WireAccounting:
     """Trace-time shuffle byte counter (see `record_wire_bytes`)."""
 
@@ -273,11 +481,33 @@ class _WireAccounting:
         self.enabled = False
         self.records: list[dict] = []
 
-    def note(self, *, secure: bool, nbytes: int, n_leaves: int, halted: bool = False):
+    def note(self, *, secure: bool, nbytes: int, n_leaves: int, halted: bool = False,
+             coalesced: bool = False, pad_bytes: int = 0,
+             per_leaf: list | None = None, collectives: int = 0,
+             keystream_launches: int = 0):
+        """Append one record per traced `keyed_all_to_all`.
+
+        bytes:              payload bytes — raw leaf bytes in plaintext
+                            mode, packed u32 payload words in secure mode;
+                            the quantity `bench_data_volume` compares to
+                            prove zero CTR ciphertext expansion.
+        wire_bytes:         bytes actually crossing the inter-chip link =
+                            bytes + pad_bytes (the coalesced wire's ≤15-word
+                            per-leaf block-alignment pad; 0 otherwise).
+        per_leaf:           per-leaf payload byte breakdown, in pytree leaf
+                            order, so the zero-expansion claim is auditable
+                            LEAF BY LEAF even when the wire is coalesced.
+        collectives:        all_to_all ops this shuffle traces per round.
+        keystream_launches: keystream derivations (encrypt + decrypt) this
+                            shuffle traces per round; 0 in plaintext mode.
+        """
         if self.enabled:
             self.records.append(
                 {"secure": secure, "bytes": nbytes, "leaves": n_leaves,
-                 "halted": halted})
+                 "halted": halted, "coalesced": coalesced,
+                 "wire_bytes": nbytes + pad_bytes, "pad_bytes": pad_bytes,
+                 "per_leaf": list(per_leaf or []), "collectives": collectives,
+                 "keystream_launches": keystream_launches})
 
     def note_halted_round(self, secure: bool = True):
         """Record the halted-round passthrough: ZERO bytes cross the wire.
@@ -332,9 +562,13 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
 
     In secure mode leaves are packed to u32 wire words, encrypted, exchanged,
     decrypted, and unpacked — only ciphertext crosses the inter-chip link.
-    `round_index` (scalar, may be traced — e.g. a `lax.scan` carry from the
-    iterative driver) selects a disjoint keystream per round; None is
-    equivalent to round 0.
+    With the default coalesced layout (`secure.coalesce`, module docstring)
+    the whole pytree travels as ONE wire buffer: one keystream launch each
+    side of exactly one `lax.all_to_all`, regardless of tree width; the
+    per-leaf layout (one collective and two launches per leaf) is kept as
+    the differential oracle. `round_index` (scalar, may be traced — e.g. a
+    `lax.scan` carry from the iterative driver) selects a disjoint keystream
+    per round; None is equivalent to round 0.
     """
     if secure is None:
         leaves = jax.tree.leaves(tree)
@@ -342,27 +576,54 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
             secure=False,
             nbytes=sum(l.size * l.dtype.itemsize for l in leaves),
             n_leaves=len(leaves),
+            per_leaf=[l.size * l.dtype.itemsize for l in leaves],
+            collectives=len(leaves),
         )
         return jax.tree.map(lambda x: lax.all_to_all(x, axis_name, 0, 0, tiled=True), tree)
 
     r = jax.tree.leaves(tree)[0].shape[0]
     idx = lax.axis_index(axis_name).astype(jnp.uint32)
+
+    # sender: nonce <- XOR my index; counter row <- destination row
+    my_id = jnp.broadcast_to(idx, (r,))
+    dest_rows = jnp.arange(r, dtype=jnp.uint32)
+    # receiver: row s came from source s; at the source it sat at row my_idx
+    src_ids = jnp.arange(r, dtype=jnp.uint32)
+    my_rows = jnp.broadcast_to(idx, (r,))
+
+    if resolve_coalesce(secure.coalesce):
+        wire, layout, treedef = _pack_wire_coalesced(tree)
+        per_leaf = [m[4] * r * 4 for m in layout.leaves]
+        wire_accounting.note(
+            secure=True,
+            nbytes=sum(per_leaf),
+            n_leaves=len(layout.leaves),
+            coalesced=True,
+            pad_bytes=layout.total_words * r * 4 - sum(per_leaf),
+            per_leaf=per_leaf,
+            collectives=1,
+            keystream_launches=2,
+        )
+        wire = _crypt_wire_coalesced(wire, layout, secure, my_id, dest_rows,
+                                     round_index)
+        wire = lax.all_to_all(wire, axis_name, 0, 0, tiled=True)
+        wire = _crypt_wire_coalesced(wire, layout, secure, src_ids, my_rows,
+                                     round_index)
+        return _unpack_wire_coalesced(wire, layout, treedef)
+
     wires, meta, treedef = _pack_wire(tree)
     wire_accounting.note(
         secure=True,
         nbytes=sum(w.size * 4 for w in wires),
         n_leaves=len(wires),
+        per_leaf=[w.size * 4 for w in wires],
+        collectives=len(wires),
+        keystream_launches=2 * len(wires),
     )
 
-    # sender: nonce <- XOR my index; counter row <- destination row
-    my_id = jnp.broadcast_to(idx, (r,))
-    dest_rows = jnp.arange(r, dtype=jnp.uint32)
     wires = _crypt_wires(wires, meta, secure, my_id, dest_rows, round_index)
 
     wires = [lax.all_to_all(w, axis_name, 0, 0, tiled=True) for w in wires]
 
-    # receiver: row s came from source s; at the source it sat at row my_idx
-    src_ids = jnp.arange(r, dtype=jnp.uint32)
-    my_rows = jnp.broadcast_to(idx, (r,))
     wires = _crypt_wires(wires, meta, secure, src_ids, my_rows, round_index)
     return _unpack_wire(wires, meta, treedef)

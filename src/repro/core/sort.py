@@ -123,6 +123,7 @@ def sample_sort(
     balance: float = 1.5,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
+    coalesce: bool | None = None,
 ):
     """Sort `values` (f32, sharded on the leading dim) via sampling sort.
 
@@ -137,8 +138,9 @@ def sample_sort(
     through the convergence-aware driver (`run_until`) and halts the round
     the partition is lossless and balanced within `balance`x of fair share
     — `len(dropped)` reports how many rounds actually executed.
-    `chacha_impl` selects the secure keystream backend (see
-    `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`).
+    `chacha_impl` selects the secure keystream backend and `coalesce` the
+    secure wire layout (see `core/shuffle.py`); `loop_impl` the halt-loop
+    shape (`core/driver.py`).
     """
     values = jnp.asarray(values, jnp.float32)
     n = values.shape[0]
@@ -168,7 +170,7 @@ def sample_sort(
     res = run_until(
         spec, {"v": values}, init_state, mesh, axis_name, secure=secure,
         max_rounds=n_rounds, chacha_impl=chacha_impl, loop_impl=loop_impl,
-        warn_on_overflow=False,
+        coalesce=coalesce, warn_on_overflow=False,
     )
     if res.dropped.size and int(res.dropped[-1]) > 0:
         warnings.warn(

@@ -1,7 +1,13 @@
 from repro.kernels.chacha20.ops import (
     chacha20_xor_rows,
+    chacha20_xor_rows_coalesced,
     chacha20_xor_words,
     ctr_crypt_array,
 )
 
-__all__ = ["chacha20_xor_rows", "chacha20_xor_words", "ctr_crypt_array"]
+__all__ = [
+    "chacha20_xor_rows",
+    "chacha20_xor_rows_coalesced",
+    "chacha20_xor_words",
+    "ctr_crypt_array",
+]

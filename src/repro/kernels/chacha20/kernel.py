@@ -1,20 +1,31 @@
 """Pallas TPU kernel: ChaCha20-CTR keystream generation fused with XOR.
 
-Layout: the message is a (n_blocks, 16) u32 array — one ChaCha block per row,
-little-endian word order (so word-wise XOR == byte-wise XOR of the RFC
-serialization). The grid tiles rows; each program materializes its tile's
-keystream entirely in VMEM registers (16 vectors of shape (B, 1)) and XORs it
-with the data tile in place.
+Two message layouts share one ARX core (`_keystream_tile`):
+
+  * BLOCK-ROW layout — (n_blocks, 16) u32, one ChaCha block per row,
+    little-endian word order (so word-wise XOR == byte-wise XOR of the RFC
+    serialization). The grid tiles rows; each program materializes its
+    tile's keystream as 16 vectors of shape (B, 1) and XORs in place. Kept
+    for the flat single-stream path (`chacha20_xor_blocks`).
+  * BLOCK-LANE layout — (16, n_blocks) u32: word index on the sublane dim,
+    BLOCKS on the 128-wide lane dim. This is the shuffle hot path
+    (`chacha20_xor_row_lanes`): the 16 state words live as (1, L) vectors,
+    so every quarter-round step is an L-lane vector op and the compiled TPU
+    lowering uses all 128 lanes of each VREG instead of the 16/128 the
+    block-row layout filled (the historical 7/8-waste the ROADMAP named).
+    The per-(row, block) counter is `ctr_base[j] + ctr_rowmul[j] * row_ctr`
+    — vector per-block bases, which is what lets one launch cover a wire
+    buffer whose blocks belong to differently-strided per-leaf counter
+    segments (the coalesced secure shuffle).
 
 TPU mapping notes:
-  * ARX only: add / xor / rotl on u32 — pure VPU lanework, MXU idle. The
-    16 state words live as (B, 1) vectors so every quarter-round step is a
-    full-lane vector op; the 20 rounds are unrolled (no loop-carried scalars).
-  * Tile = (block_rows, 16) u32 = 64·block_rows bytes. Default 2048 rows →
-    128 KiB in + 128 KiB out per tile, comfortably inside 16 MiB VMEM while
-    long enough to amortize control overhead.
-  * The per-row counter is derived from the grid position: counters never
-    round-trip through HBM, which keeps the kernel a single-pass stream.
+  * ARX only: add / xor / rotl on u32 — pure VPU lanework, MXU idle; the
+    20 rounds are unrolled (no loop-carried scalars).
+  * Lane tile = (16, L) u32 = 64·L bytes. Default L=2048 → 128 KiB in +
+    128 KiB out per tile, comfortably inside 16 MiB VMEM while long enough
+    to amortize control overhead.
+  * Counters are derived in-kernel from per-tile base/rowmul vectors:
+    the keystream never round-trips through HBM.
 """
 
 from __future__ import annotations
@@ -28,15 +39,20 @@ from jax.experimental import pallas as pl
 from repro.crypto.chacha import CONSTANT_WORDS, _QR_SCHEDULE
 
 DEFAULT_BLOCK_ROWS = 2048
+# blocks per lane tile of the (16, n_blocks) layout; multiple of the 128-lane
+# VREG width so the compiled TPU lowering is fully lane-aligned
+DEFAULT_BLOCK_LANES = 2048
 
 
-def _keystream_tile(init):
-    """20 unrolled ARX rounds + feed-forward over 16 (B, 1) state vectors.
+def _keystream_tile(init, axis: int = 1):
+    """20 unrolled ARX rounds + feed-forward over 16 state vectors.
 
-    The shared cryptographic core of both tile kernels: any change here (or
-    a future TPU re-tiling) applies to the single-stream and the batched
-    rows kernel alike, so their keystreams cannot diverge. Returns the
-    (B, 16) keystream tile.
+    The shared cryptographic core of every tile kernel: any change here
+    applies to the single-stream, the batched block-row, and the block-lane
+    kernels alike, so their keystreams cannot diverge. `init` is 16 arrays
+    of identical shape; the result concatenates the 16 output words along
+    `axis` — axis=1 with (B, 1) vectors yields the (B, 16) block-row tile,
+    axis=0 with (1, L) vectors yields the (16, L) block-lane tile.
     """
 
     def rotl(v, n):
@@ -56,7 +72,7 @@ def _keystream_tile(init):
             xb = rotl(xb ^ xc, 7)
             xs[a], xs[b], xs[c], xs[d] = xa, xb, xc, xd
 
-    return jnp.concatenate([x + x0 for x, x0 in zip(xs, init)], axis=1)
+    return jnp.concatenate([x + x0 for x, x0 in zip(xs, init)], axis=axis)
 
 
 def _chacha20_tile_kernel(state0_ref, x_ref, y_ref, *, block_rows: int):
@@ -107,23 +123,25 @@ def chacha20_xor_blocks(
     )(state0, x_blocks)
 
 
-def _chacha20_rows_tile_kernel(state0_ref, nid_ref, ctr_ref, x_ref, y_ref, *,
-                               block_rows: int):
-    """One (row, block-tile) program of the batched multi-row stream.
+def _chacha20_lanes_tile_kernel(state0_ref, nid_ref, row_ref, base_ref,
+                                mul_ref, x_ref, y_ref, *, block_lanes: int):
+    """One (row, lane-tile) program of the batched multi-row stream.
 
-    The grid is (n_rows, n_block_tiles): program (i, j) encrypts blocks
-    [j*block_rows, (j+1)*block_rows) of wire row i. The row's nonce is the
-    template nonce with word 0 XOR nid_ref[0]; its block counters start at
-    ctr_ref[0] (absolute — state0 word 12 is ignored). The ARX core is the
-    shared `_keystream_tile`.
+    The grid is (n_rows, n_blocks // block_lanes): program (i, j) encrypts
+    lane-layout blocks [j*L, (j+1)*L) of wire row i, where the data tile is
+    (1, 16, L) — word index on the sublane dim, blocks on the lane dim. The
+    row's nonce is the template nonce with word 0 XOR nid_ref[0]; the block
+    counter of lane l is `base_ref[l] + mul_ref[l] * row_ref[0]` (absolute —
+    state0 word 12 is ignored), so one launch covers blocks whose counters
+    advance with different per-segment strides (the coalesced wire). The
+    ARX core is the shared `_keystream_tile`, concatenated on the sublane
+    axis so each of the 16 output words is a full (1, L) lane vector.
     """
-    tile = pl.program_id(1)
     s0 = state0_ref[...]  # (16,) u32 template: const | key | (ignored) | nonce
     nid = nid_ref[0]
-    ctr0 = ctr_ref[0]
+    row_ctr = row_ref[0]
 
-    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1), 0)
-    ctr = ctr0 + jnp.uint32(block_rows) * tile.astype(jnp.uint32) + row
+    ctr = (base_ref[...] + mul_ref[...] * row_ctr)[None, :]  # (1, L)
     nonce0 = s0[13] ^ nid
 
     init = []
@@ -131,11 +149,58 @@ def _chacha20_rows_tile_kernel(state0_ref, nid_ref, ctr_ref, x_ref, y_ref, *,
         if i == 12:
             init.append(ctr)
         elif i == 13:
-            init.append(jnp.broadcast_to(nonce0, (block_rows, 1)))
+            init.append(jnp.broadcast_to(nonce0, (1, block_lanes)))
         else:
-            init.append(jnp.broadcast_to(s0[i], (block_rows, 1)))
+            init.append(jnp.broadcast_to(s0[i], (1, block_lanes)))
 
-    y_ref[...] = x_ref[...] ^ _keystream_tile(init)[None]
+    y_ref[...] = x_ref[...] ^ _keystream_tile(init, axis=0)[None]
+
+
+def chacha20_xor_row_lanes(
+    x_lanes: jax.Array,
+    state0: jax.Array,
+    nonce_ids: jax.Array,
+    ctr_rows: jax.Array,
+    ctr_base: jax.Array,
+    ctr_rowmul: jax.Array,
+    *,
+    block_lanes: int = DEFAULT_BLOCK_LANES,
+    interpret: bool = True,
+) -> jax.Array:
+    """XOR an (n_rows, 16, n_blocks) u32 lane-layout buffer with keystream.
+
+    One launch covers the whole buffer with a (rows × lane-tiles) grid —
+    the secure-shuffle fast path. Row i, block j draws keystream from
+      nonce   = state0 nonce with word 0 XOR nonce_ids[i]
+      counter = ctr_base[j] + ctr_rowmul[j] * ctr_rows[i]
+    (absolute; state0[12] is ignored). The vector bases let one launch span
+    a coalesced multi-leaf wire: within leaf segment l, ctr_base carries the
+    leaf's counter offset + intra-leaf block index and ctr_rowmul the leaf's
+    blocks-per-row stride. n_blocks must be a multiple of block_lanes
+    (ops.py pads); the legacy contiguous layout is base=iota, rowmul=1,
+    ctr_rows=per-row starts.
+    """
+    n_rows, w, n_blocks = x_lanes.shape
+    assert w == 16 and x_lanes.dtype == jnp.uint32
+    assert n_blocks % block_lanes == 0, (n_blocks, block_lanes)
+    assert nonce_ids.shape == (n_rows,) and ctr_rows.shape == (n_rows,)
+    assert ctr_base.shape == (n_blocks,) and ctr_rowmul.shape == (n_blocks,)
+    grid = (n_rows, n_blocks // block_lanes)
+    return pl.pallas_call(
+        functools.partial(_chacha20_lanes_tile_kernel, block_lanes=block_lanes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((16,), lambda i, j: (0,)),  # template state, replicated
+            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row nonce XOR id
+            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row counter operand
+            pl.BlockSpec((block_lanes,), lambda i, j: (j,)),  # per-block base
+            pl.BlockSpec((block_lanes,), lambda i, j: (j,)),  # per-block stride
+            pl.BlockSpec((1, 16, block_lanes), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 16, block_lanes), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, 16, n_blocks), jnp.uint32),
+        interpret=interpret,
+    )(state0, nonce_ids, ctr_rows, ctr_base, ctr_rowmul, x_lanes)
 
 
 def chacha20_xor_row_blocks(
@@ -149,9 +214,12 @@ def chacha20_xor_row_blocks(
 ) -> jax.Array:
     """XOR an (n_rows, n_blocks, 16) u32 buffer with per-row keystreams.
 
-    One launch covers the whole buffer with a (rows × block-tiles) grid —
-    this is the secure-shuffle fast path, replacing R vmapped single-row
-    keystream expansions. Row i, block j draws keystream from
+    Legacy block-row interface kept for the per-leaf differential oracle and
+    the kernel test suite; since the lane re-tiling it is a thin wrapper
+    that transposes into the (rows, 16, blocks) lane layout and runs the
+    SAME `chacha20_xor_row_lanes` kernel with the contiguous-counter
+    special case (base=iota, rowmul=1), so the two entry points cannot
+    drift. Row i, block j draws keystream from
       nonce  = state0 nonce with word 0 XOR nonce_ids[i]
       counter = ctr_starts[i] + j       (absolute; state0[12] is ignored)
     n_blocks must be a multiple of block_rows (ops.py pads).
@@ -160,17 +228,14 @@ def chacha20_xor_row_blocks(
     assert w == 16 and x_rows.dtype == jnp.uint32
     assert n_blocks % block_rows == 0, (n_blocks, block_rows)
     assert nonce_ids.shape == (n_rows,) and ctr_starts.shape == (n_rows,)
-    grid = (n_rows, n_blocks // block_rows)
-    return pl.pallas_call(
-        functools.partial(_chacha20_rows_tile_kernel, block_rows=block_rows),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((16,), lambda i, j: (0,)),  # template state, replicated
-            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row nonce XOR id
-            pl.BlockSpec((1,), lambda i, j: (i,)),   # per-row counter start
-            pl.BlockSpec((1, block_rows, 16), lambda i, j: (i, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_rows, 16), lambda i, j: (i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_rows, n_blocks, 16), jnp.uint32),
+    y = chacha20_xor_row_lanes(
+        jnp.swapaxes(x_rows, 1, 2),
+        state0,
+        nonce_ids,
+        ctr_starts,
+        jnp.arange(n_blocks, dtype=jnp.uint32),
+        jnp.ones((n_blocks,), jnp.uint32),
+        block_lanes=block_rows,
         interpret=interpret,
-    )(state0, nonce_ids, ctr_starts, x_rows)
+    )
+    return jnp.swapaxes(y, 1, 2)

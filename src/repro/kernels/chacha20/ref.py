@@ -32,3 +32,21 @@ def chacha20_xor_row_blocks_ref(x_rows, state0, nonce_ids, ctr_starts):
 
     return jax.vmap(one)(x_rows, jnp.asarray(nonce_ids, jnp.uint32),
                          jnp.asarray(ctr_starts, jnp.uint32))
+
+
+def chacha20_xor_row_lanes_ref(x_lanes, state0, nonce_ids, ctr_rows,
+                               ctr_base, ctr_rowmul):
+    """Reference for the lane-layout kernel: (R, 16, n_blocks) u32 buffer,
+    row i / block j using nonce word 0 XOR nonce_ids[i] and absolute counter
+    ctr_base[j] + ctr_rowmul[j] * ctr_rows[i] (state0 word 12 ignored)."""
+    key_words = state0[4:12]
+    ctr_base = jnp.asarray(ctr_base, jnp.uint32)
+    ctr_rowmul = jnp.asarray(ctr_rowmul, jnp.uint32)
+
+    def one(row, nid, rc):
+        nonce = state0[13:16].at[0].set(state0[13] ^ nid)
+        counters = ctr_base + ctr_rowmul * rc
+        return row ^ chacha20_block_words(key_words, counters, nonce).T
+
+    return jax.vmap(one)(x_lanes, jnp.asarray(nonce_ids, jnp.uint32),
+                         jnp.asarray(ctr_rows, jnp.uint32))

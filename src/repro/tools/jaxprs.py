@@ -1,0 +1,59 @@
+"""Jaxpr introspection helpers: count primitives across nested call sites.
+
+Used by the shuffle benchmarks and tests to PROVE structural claims about a
+traced program — e.g. that a coalesced secure round contains exactly one
+`all_to_all` and two `pallas_call` keystream launches — instead of trusting
+the accounting that produced them. Counting happens on the jaxpr, not the
+lowered HLO: on a single-device mesh XLA may simplify a collective away,
+but the traced program is what scales to a real mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+import jax
+
+try:  # modern jax moved core under jax.extend
+    from jax.extend import core as _core  # type: ignore
+    _ = _core.Jaxpr  # probe the surface we need
+except (ImportError, AttributeError):  # pragma: no cover - version-dependent
+    from jax import core as _core  # type: ignore
+
+
+def _sub_jaxprs(value: Any) -> Iterator[Any]:
+    """Yield every (Closed)Jaxpr reachable from one eqn param value."""
+    if isinstance(value, _core.ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, _core.Jaxpr):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def count_primitives(jaxpr, name: str) -> int:
+    """Count eqns whose primitive is `name`, recursing into nested jaxprs.
+
+    `jaxpr` may be a Jaxpr, a ClosedJaxpr, or the result of
+    `jax.make_jaxpr(...)`. Nested call sites (pjit, scan, while, cond
+    branches, shard_map bodies, ...) each contribute their own counts: two
+    pjit eqns sharing one inner jaxpr count twice, mirroring how often the
+    primitive appears per execution of the outer program (conditional
+    branches are an over-approximation: each branch is counted).
+    """
+    if isinstance(jaxpr, _core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                n += count_primitives(sub, name)
+    return n
+
+
+def count_in_fn(fn, name: str, *args, **kwargs) -> int:
+    """Trace `fn(*args, **kwargs)` and count primitive `name` in its jaxpr."""
+    return count_primitives(jax.make_jaxpr(fn)(*args, **kwargs), name)

@@ -117,6 +117,35 @@ def test_bucket_pack_return_positions_under_overflow():
             assert flat_v[pos[i]] == float(vals[i])
 
 
+def test_bucket_pack_empty_trailing_dims():
+    """A (n, 0)-shaped value leaf (scalar-per-item pytree leaf with an empty
+    trailing dim) must not reach the n_buckets*capacity+1 overflow-slot
+    scatter — the guard returns the empty fixed-shape buffer directly, with
+    shapes/dtypes consistent with the keyed leaves and overflow still
+    counted from the keys."""
+    r, cap = 2, 3
+    keys = jnp.asarray([10, 11, 12, 13, 14, -1, 20], jnp.int32)
+    bucket = jnp.asarray([0, 0, 0, 0, 0, 0, 1], jnp.int32)
+    vals = {
+        "empty": jnp.zeros((7, 0), jnp.float32),
+        "also_empty": jnp.zeros((7, 2, 0), jnp.int32),
+        "full": jnp.arange(7, dtype=jnp.float32),
+    }
+    bk, bv, dropped = bucket_pack(keys, bucket, vals, r, cap)
+    assert int(dropped) == 2  # overflow accounting unaffected by empty leaves
+    assert bv["empty"].shape == (r, cap, 0)
+    assert bv["empty"].dtype == jnp.float32
+    assert bv["also_empty"].shape == (r, cap, 2, 0)
+    assert bv["also_empty"].dtype == jnp.int32
+    # the non-empty leaf routes exactly as it would without the empty ones
+    _, bv_ref, _ = bucket_pack(keys, bucket, vals["full"], r, cap)
+    np.testing.assert_array_equal(np.asarray(bv["full"]), np.asarray(bv_ref))
+    # and the degenerate shape survives a jit boundary
+    jitted = jax.jit(lambda k, b, v: bucket_pack(k, b, v, r, cap))
+    _, bv2, d2 = jitted(keys, bucket, vals)
+    assert int(d2) == 2 and bv2["empty"].shape == (r, cap, 0)
+
+
 def test_bucket_pack_intra_bucket_order_stable():
     """Items of one bucket keep their input order in the packed row (the
     stable-argsort contract combiners and MoE-style positions rely on)."""
