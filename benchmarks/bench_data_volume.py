@@ -63,8 +63,10 @@ def run():
     # moves the same volume). Secure mode is measured under BOTH wire
     # layouts: the coalesced single-wire default and the per-leaf oracle —
     # the per-leaf byte breakdown in each record proves zero CTR ciphertext
-    # expansion LEAF BY LEAF even after coalescing (the coalesced wire's
-    # only extra bytes are its ≤15-word/leaf block-alignment pad).
+    # expansion LEAF BY LEAF even after coalescing. The packed wire carries
+    # ZERO pad bytes (leaf tails share keystream blocks; core/shuffle.py),
+    # so wire_bytes == payload bytes on every path, and the plaintext run
+    # (default coalesced) rides the same single-collective topology.
     mesh = make_mesh((1,), ("data",))
     n, k, n_rounds = 2048, 8, 2
     pts, _ = generate_points(n, k, seed=6)
@@ -94,6 +96,10 @@ def run():
         assert rec["per_leaf"] == plain[0]["per_leaf"], (rec, plain[0])
     assert coalesced[0]["collectives"] == 1, coalesced
     assert per_leaf[0]["collectives"] == per_leaf[0]["leaves"], per_leaf
+    # packed wire: zero pad bytes travel, plaintext shares the 1-collective
+    # topology (kmeans leaves are word-aligned, so plain bytes == packed)
+    assert coalesced[0]["pad_bytes"] == 0, coalesced
+    assert plain[0]["coalesced"] and plain[0]["collectives"] == 1, plain
     rows.append((
         "driver_shuffle_bytes_per_round", 0.0,
         f"plain={plain[0]['bytes']}B,secure={coalesced[0]['bytes']}B,"

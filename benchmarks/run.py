@@ -9,6 +9,8 @@
   bench_crypto          cipher throughput (the boundary tax primitive)
   bench_shuffle         coalesced vs per-leaf secure shuffle wire
                         (collectives/launches/bytes/time per round)
+  bench_sharded_state   sharded vs replicated carried state (per-device
+                        state bytes + collective counts on the sort round)
   bench_roofline        §Roofline terms from the dry-run report
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -19,9 +21,11 @@ dispatched, shuffle wire bytes) are serialized to ``BENCH_driver.json`` —
 modules publish them via a module-level ``LAST_METRICS`` dict — and the
 secure-shuffle wire metrics (collectives + keystream launches per round,
 bytes, coalesced vs per-leaf steady state; ``bench_shuffle``) additionally
-to ``BENCH_shuffle.json``. CI runs ``run.py --smoke`` (reduced sizes,
-driver-relevant modules only) and uploads both JSONs as artifacts so
-regressions are visible across PRs.
+to ``BENCH_shuffle.json``, and the carried-state layout metrics (per-device
+state bytes + sort-round collective counts, sharded vs replicated;
+``bench_sharded_state``) to ``BENCH_sharded_state.json``. CI runs
+``run.py --smoke`` (reduced sizes, driver-relevant modules only) and
+uploads the JSONs as artifacts so regressions are visible across PRs.
 """
 
 import argparse
@@ -41,6 +45,7 @@ from benchmarks import (
     bench_overhead,
     bench_paging,
     bench_roofline,
+    bench_sharded_state,
     bench_shuffle,
     bench_tcb,
 )
@@ -51,6 +56,7 @@ MODULES = [
     bench_convergence,
     bench_iteration_time,
     bench_shuffle,
+    bench_sharded_state,
     bench_paging,
     bench_overhead,
     bench_data_volume,
@@ -58,7 +64,7 @@ MODULES = [
 ]
 
 # the modules exercised by the CI smoke lane: the driver + shuffle hot paths
-SMOKE_MODULES = [bench_iteration_time, bench_shuffle]
+SMOKE_MODULES = [bench_iteration_time, bench_shuffle, bench_sharded_state]
 
 
 def _run_module(mod, smoke: bool):
@@ -78,6 +84,8 @@ def main(argv=None) -> None:
                     help="path for the machine-readable driver metrics")
     ap.add_argument("--shuffle-json-out", default="BENCH_shuffle.json",
                     help="path for the machine-readable shuffle-wire metrics")
+    ap.add_argument("--sharded-state-json-out", default="BENCH_sharded_state.json",
+                    help="path for the machine-readable carried-state metrics")
     args = ap.parse_args(argv)
 
     modules = SMOKE_MODULES if args.smoke else MODULES
@@ -114,6 +122,16 @@ def main(argv=None) -> None:
         with open(args.shuffle_json_out, "w") as f:
             json.dump(shuffle_metrics, f, indent=2, sort_keys=True)
         print(f"wrote {args.shuffle_json_out}", file=sys.stderr)
+    # likewise for the carried-state layout trajectory: per-device state
+    # bytes and sort-round collective counts, sharded vs replicated
+    if bench_sharded_state in modules:
+        state_metrics = {k: metrics[k] for k in
+                         ("schema", "smoke", "backend", "platform", "jax")}
+        state_metrics["sharded_state"] = getattr(
+            bench_sharded_state, "LAST_METRICS", {})
+        with open(args.sharded_state_json_out, "w") as f:
+            json.dump(state_metrics, f, indent=2, sort_keys=True)
+        print(f"wrote {args.sharded_state_json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

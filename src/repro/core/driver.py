@@ -78,14 +78,53 @@ post-convergence rounds at two levels:
     compiles — a 32-round program, while long jobs still amortize host
     round-trips at the full chunk size.
 
-Carried-state contract
-----------------------
-`state` is REPLICATED: every shard holds the same value on entry, and
-`reduce_fn` must restore replication before returning (end in a collective —
-psum / all_gather — exactly like the paper's "client redistributes the new
-centers" step). The driver shards `inputs` over the mesh axis and replicates
-`state`/`aux` (out_specs `P()`); a reduce_fn that returns shard-varying
-state is a bug the shuffle cannot fix.
+Carried-state contract (two tiers: replicated | sharded)
+--------------------------------------------------------
+Each leaf of `state` lives in one of two layouts, chosen PER LEAF by
+`IterativeSpec.state_specs` — a pytree of `jax.sharding.PartitionSpec`s
+matching the state's structure (None, the default, means `P()` everywhere
+and preserves the historical all-replicated contract bit-for-bit):
+
+  * REPLICATED leaf — `P()`: every shard holds the same value on entry,
+    and `reduce_fn` must restore replication before returning (end in a
+    collective — psum / all_gather — exactly like the paper's "client
+    redistributes the new centers" step). A reduce_fn that returns
+    shard-varying data in a replicated leaf is a bug the shuffle cannot
+    fix.
+  * SHARDED leaf — `P(axis)`: the leaf stays partitioned over the mesh
+    axis ACROSS rounds, resident where it was produced. Inside the round
+    body `map_fn`/`reduce_fn` see the LOCAL shard (leading dim divided by
+    the axis size) and `reduce_fn` returns the updated LOCAL shard — no
+    re-replicating gather at the end of the round. This is what removes
+    the per-round all_gather for large per-reducer state (sort output,
+    join tables): per-device state bytes shrink by ~the axis size and the
+    round loses a collective, with zero new collectives introduced
+    (proven by jaxpr inspection in `tests/test_sharded_state.py`).
+
+  RESHARDING RULE: the driver NEVER reshards carried state between rounds
+  or between chunks. The spec declared for a leaf is simultaneously (a) the
+  layout of the value `reduce_fn` must return every round, (b) the layout
+  the next round's `map_fn`/`reduce_fn` receive, and (c) the layout of the
+  final state a runner returns — a global jax.Array; `np.asarray` (or any
+  host read) gathers it AFTER the loop, which is the one-time cost sharded
+  mode defers from every round to the end of the job.
+
+  HALT-FN RESTRICTION: `halt_fn` stays a pure function of REPLICATED
+  values only — replicated state leaves, the (replicated) aux, and the
+  round index. The driver enforces this at trace time: sharded leaves are
+  replaced by guard objects in the state `halt_fn` sees, and touching one
+  raises a ValueError naming the leaf. (A halt predicate over shard-local
+  data is a deadlock: shards would disagree about whether the next
+  round's collectives execute.)
+
+  DONATION is layout-agnostic: `donate_state=True` aliases sharded leaves'
+  per-device buffers exactly like replicated ones — `run_until`'s chunk
+  loop keeps sharded state resident on its devices with zero copies
+  between chunks.
+
+The driver shards `inputs` over the mesh axis and replicates `aux`
+(out_specs `P()`); aux must therefore be replicated by `reduce_fn` just
+like replicated state leaves.
 
 Counter-space layout (extends core/shuffle.py)
 ----------------------------------------------
@@ -114,6 +153,7 @@ Workloads on the driver: `repro.core.kmeans` (paper §V), `repro.core.sort`
 
 from __future__ import annotations
 
+import os
 import warnings
 from dataclasses import dataclass, replace
 from functools import partial
@@ -147,6 +187,136 @@ HALT_LOOP_IMPLS = ("masked_scan", "while")
 # `record_wire_bytes`, and its aux layout matches the non-halting scan.
 DEFAULT_HALT_LOOP = "while"
 
+STATE_SPECS_ENV = "REPRO_STATE_SPECS"
+_STATE_MODES = ("replicated", "sharded")
+
+
+def resolve_state_mode(mode: str = "auto") -> str:
+    """Resolve a carried-state layout selector to 'replicated' | 'sharded'.
+
+    The env-matrix hook for workloads that support both layouts (e.g.
+    `core/sort.py`): 'auto'/None defers to $REPRO_STATE_SPECS (default
+    'sharded' — the layout this repo ships); an explicit mode always wins
+    over the environment. Like the chacha/coalesce selectors, the choice is
+    read at trace time.
+    """
+    from_env = False
+    if mode in (None, "auto"):
+        env_val = os.environ.get(STATE_SPECS_ENV)
+        if env_val is None:
+            return "sharded"
+        mode, from_env = env_val.strip().lower(), True
+    if mode not in _STATE_MODES:
+        if from_env:
+            raise ValueError(
+                f"invalid ${STATE_SPECS_ENV}={mode!r} in the environment: "
+                f"carried-state mode must be one of {_STATE_MODES} "
+                f"(unset ${STATE_SPECS_ENV} to use the default 'sharded')")
+        raise ValueError(
+            f"carried-state mode must be one of {_STATE_MODES} or 'auto', "
+            f"got {mode!r}")
+    return mode
+
+
+def _resolve_state_specs(spec: "IterativeSpec", state):
+    """Resolve `spec.state_specs` against a concrete state pytree.
+
+    Returns (spec_tree, flat_is_sharded): `spec_tree` mirrors the state's
+    structure with one `PartitionSpec` per leaf (usable directly as
+    shard_map in/out specs); `flat_is_sharded` flags, in flat leaf order,
+    the leaves that carry a mesh axis. None (the whole attribute or a
+    leaf) defaults to `P()` — the replicated contract — and a single bare
+    `PartitionSpec` broadcasts to every leaf (so `state_specs=P()` declares
+    any state shape fully replicated). Raises ValueError — at trace/build
+    time, not inside the loop — when the declared tree does not match the
+    state's structure or holds a non-PartitionSpec leaf.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(state)
+    if spec.state_specs is None:
+        flat_specs = [P()] * len(flat)
+    elif isinstance(spec.state_specs, P):
+        flat_specs = [spec.state_specs] * len(flat)
+    else:
+        try:
+            flat_specs = treedef.flatten_up_to(spec.state_specs)
+        except ValueError as e:
+            raise ValueError(
+                "IterativeSpec.state_specs must be a pytree matching the "
+                f"carried state's structure {treedef}; got "
+                f"{spec.state_specs!r}") from e
+        checked = []
+        for i, p in enumerate(flat_specs):
+            if p is None:
+                p = P()
+            if not isinstance(p, P):
+                raise ValueError(
+                    "IterativeSpec.state_specs leaves must be "
+                    "jax.sharding.PartitionSpec (or None for replicated); "
+                    f"leaf {i} is {p!r}")
+            checked.append(p)
+        flat_specs = checked
+    sharded = [any(a is not None for a in tuple(p)) for p in flat_specs]
+    return jax.tree_util.tree_unflatten(treedef, flat_specs), sharded
+
+
+class _ShardedHaltGuard:
+    """Trace-time stand-in for a sharded state leaf inside `halt_fn`.
+
+    The replicated-halt contract (module docstring) forbids deriving the
+    halt predicate from shard-varying data; sharded leaves are therefore
+    swapped for these guards in the state `halt_fn` receives, and ANY use —
+    arithmetic, jnp coercion, attribute access, iteration — raises a
+    ValueError naming the leaf, at trace time, instead of deadlocking the
+    mesh at run time.
+    """
+
+    def __init__(self, path: str, pspec):
+        object.__setattr__(self, "_path", path)
+        object.__setattr__(self, "_pspec", pspec)
+
+    def _halt_guard_raise(self, *_a, **_k):
+        raise ValueError(
+            f"IterativeSpec.halt_fn touched the SHARDED carried-state leaf "
+            f"state{self._path} (state_specs leaf {self._pspec}): the "
+            "replicated-halt contract requires halt_fn to be a pure "
+            "function of replicated values only (replicated state leaves, "
+            "aux, round index) — a shard-varying predicate would deadlock "
+            "the mesh. Derive the halt signal from a replicated leaf or "
+            "from aux, or declare this leaf P() in state_specs.")
+
+    def __getattr__(self, name):
+        self._halt_guard_raise()
+
+    def __repr__(self):
+        return f"_ShardedHaltGuard(state{self._path}: {self._pspec})"
+
+
+for _name in (
+    "__jax_array__", "__array__", "__bool__", "__int__", "__float__",
+    "__index__", "__len__", "__iter__", "__getitem__", "__neg__", "__pos__",
+    "__abs__", "__invert__", "__add__", "__radd__", "__sub__", "__rsub__",
+    "__mul__", "__rmul__", "__truediv__", "__rtruediv__", "__floordiv__",
+    "__rfloordiv__", "__mod__", "__rmod__", "__pow__", "__rpow__",
+    "__matmul__", "__rmatmul__", "__and__", "__rand__", "__or__", "__ror__",
+    "__xor__", "__rxor__", "__lshift__", "__rlshift__", "__rshift__",
+    "__rrshift__", "__lt__", "__le__", "__gt__", "__ge__", "__eq__",
+    "__ne__", "__format__",
+):
+    setattr(_ShardedHaltGuard, _name, _ShardedHaltGuard._halt_guard_raise)
+
+
+def _guard_state_for_halt(state, spec_tree, flat_sharded):
+    """Swap sharded leaves for `_ShardedHaltGuard`s in halt_fn's state view."""
+    if not any(flat_sharded):
+        return state
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    flat_specs = treedef.flatten_up_to(spec_tree)
+    guarded = [
+        _ShardedHaltGuard(jax.tree_util.keystr(path), pspec) if sh else leaf
+        for (path, leaf), pspec, sh in zip(paths_leaves, flat_specs, flat_sharded)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, guarded)
+
 
 @dataclass(frozen=True)
 class IterativeSpec:
@@ -155,13 +325,16 @@ class IterativeSpec:
     map_fn(state, inputs, round_index) -> (mapped_keys, mapped_values)
         Per-shard, vectorized. `inputs` is the (local slice of the) sharded
         input pytree; `round_index` is a traced u32 scalar for round-varying
-        behavior (streaming slices, phase switches).
+        behavior (streaming slices, phase switches). Sharded state leaves
+        (see `state_specs`) arrive as their LOCAL shard.
     combine_fn(keys, values) -> (keys, values)
         Optional local pre-aggregation before the shuffle.
     reduce_fn(state, keys, values, valid, round_index) -> (new_state, aux)
-        Per-shard over the received pairs; must restore state replication
-        (end in psum/all_gather). `aux` is any pytree of per-round
-        diagnostics (stacked over rounds by the scan).
+        Per-shard over the received pairs. Replicated state leaves must be
+        restored to replication (end in psum/all_gather); sharded leaves
+        must be returned as the updated LOCAL shard in the declared layout
+        (module docstring: Carried-state contract). `aux` is any pytree of
+        per-round REPLICATED diagnostics (stacked over rounds by the scan).
     hash_fn(keys) -> u32
         destination shard = hash_fn(k) % R.
     capacity:  per-destination slots C; 0 -> auto (ceil(n_mapped / R) * 2).
@@ -169,10 +342,17 @@ class IterativeSpec:
     halt_fn(state, aux, round_index) -> bool scalar  [optional]
         Convergence predicate, evaluated after every round on that round's
         freshly reduced state/aux. MUST depend only on replicated values so
-        every shard agrees (module docstring: Termination). When set, the
+        every shard agrees (module docstring: Termination); sharded state
+        leaves are guarded at trace time and raise on use. When set, the
         fused loop stops executing rounds — and consuming keystream — as
         soon as it returns True; runners then also return
         (rounds_executed, halted).
+    state_specs:  pytree of `jax.sharding.PartitionSpec` matching the
+        carried state's structure, choosing each leaf's cross-round layout:
+        `P()` (or None) = replicated — the default everywhere when
+        `state_specs` is None, preserving the historical contract
+        bit-for-bit — `P(axis)` = resident-sharded over the mesh axis
+        (module docstring: Carried-state contract).
     """
 
     map_fn: Callable[[Any, Any, Any], tuple]
@@ -182,10 +362,12 @@ class IterativeSpec:
     capacity: int = 0
     n_rounds: int = 1
     halt_fn: Callable[[Any, Any, Any], Any] | None = None
+    state_specs: Any = None
 
 
 def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shards: int,
-                secure: SecureShuffleConfig | None, trace_info: dict | None = None):
+                secure: SecureShuffleConfig | None, coalesce=None,
+                trace_info: dict | None = None):
     mk, mv = spec.map_fn(state, inputs, r)
     if spec.combine_fn is not None:
         mk, mv = spec.combine_fn(mk, mv)
@@ -200,7 +382,8 @@ def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shar
     bucket = (spec.hash_fn(mk) % jnp.uint32(n_shards)).astype(jnp.int32)
     bk, bv, dropped = bucket_pack(mk, bucket, mv, n_shards, capacity)
 
-    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure, round_index=r)
+    recv = keyed_all_to_all({"k": bk, "v": bv}, axis_name, secure, round_index=r,
+                            coalesce=coalesce)
     flat_k = recv["k"].reshape(-1)
     flat_v = compat.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), recv["v"])
     valid = flat_k >= 0
@@ -210,25 +393,29 @@ def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shar
 
 
 def _shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axis_name: str,
-                n_shards: int, secure: SecureShuffleConfig | None,
+                n_shards: int, secure: SecureShuffleConfig | None, coalesce=None,
                 trace_info: dict | None = None):
     rounds = jnp.asarray(round_offset, jnp.uint32) + jnp.arange(spec.n_rounds, dtype=jnp.uint32)
     body = partial(_round_body, inputs=inputs, spec=spec, axis_name=axis_name,
-                   n_shards=n_shards, secure=secure, trace_info=trace_info)
+                   n_shards=n_shards, secure=secure, coalesce=coalesce,
+                   trace_info=trace_info)
     final_state, (aux, dropped) = lax.scan(body, state, rounds)
     return final_state, aux, dropped
 
 
 def _halting_shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axis_name: str,
                         n_shards: int, secure: SecureShuffleConfig | None, loop_impl: str,
-                        trace_info: dict | None = None):
+                        coalesce=None, trace_info: dict | None = None):
     """Halt-aware round loop: stops executing (and consuming keystream) once
     `spec.halt_fn` fires. Returns (state, aux, dropped, rounds_executed, halted).
     """
     n_rounds = spec.n_rounds
     body = partial(_round_body, inputs=inputs, spec=spec, axis_name=axis_name,
-                   n_shards=n_shards, secure=secure, trace_info=trace_info)
+                   n_shards=n_shards, secure=secure, coalesce=coalesce,
+                   trace_info=trace_info)
     r0 = jnp.asarray(round_offset, jnp.uint32)
+    # halt_fn's replicated-only state view: sharded leaves raise on use
+    state_spec_tree, flat_sharded = _resolve_state_specs(spec, state)
 
     # abstract round output, for the passthrough branch / preallocated
     # buffers; suppressed so the shape-only pass is invisible to wire
@@ -240,7 +427,8 @@ def _halting_shard_body(inputs, state, round_offset, *, spec: IterativeSpec, axi
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds_tree)
 
     def _halt(new_state, aux, r):
-        return jnp.reshape(jnp.asarray(spec.halt_fn(new_state, aux, r), jnp.bool_), ())
+        guarded = _guard_state_for_halt(new_state, state_spec_tree, flat_sharded)
+        return jnp.reshape(jnp.asarray(spec.halt_fn(guarded, aux, r), jnp.bool_), ())
 
     if loop_impl == "while":
         aux0 = jax.tree.map(lambda s: jnp.zeros((n_rounds,) + s.shape, s.dtype), aux_sds)
@@ -302,11 +490,12 @@ def make_iterative_runner(
     `chacha_impl` overrides the secure config's keystream backend
     ('pallas' | 'pallas-interpret' | 'jnp'; see `core/shuffle.py`) — baked
     in at build time, since the impl choice is part of the traced program.
-    `coalesce` overrides the secure wire layout the same way (True — one
-    keystream launch each side of ONE all_to_all per round — False — the
-    per-leaf oracle; None keeps the config's own setting). `loop_impl` selects the
-    halt-aware loop shape (`HALT_LOOP_IMPLS`; only meaningful when
-    `spec.halt_fn` is set).
+    `coalesce` overrides the wire layout the same way, in BOTH modes (True —
+    one packed wire through ONE all_to_all per round, plus one keystream
+    launch each side in secure mode — False — the per-leaf oracle; None
+    keeps the secure config's own setting / the plaintext 'auto' default).
+    `loop_impl` selects the halt-aware loop shape (`HALT_LOOP_IMPLS`; only
+    meaningful when `spec.halt_fn` is set).
 
     `donate_state=True` donates the carried-state argument's buffers to the
     dispatch (`jax.jit` donate_argnums): XLA writes the chunk's final state
@@ -346,23 +535,26 @@ def make_iterative_runner(
             raise ValueError(f"loop_impl must be one of {HALT_LOOP_IMPLS}, got {loop!r}")
         body = partial(_halting_shard_body, spec=spec, axis_name=axis_name,
                        n_shards=n_shards, secure=secure, loop_impl=loop,
-                       trace_info=trace_info)
+                       coalesce=coalesce, trace_info=trace_info)
         extra_out = (P(), P())  # rounds_executed, halted (replicated scalars)
     else:
         body = partial(_shard_body, spec=spec, axis_name=axis_name, n_shards=n_shards,
-                       secure=secure, trace_info=trace_info)
+                       secure=secure, coalesce=coalesce, trace_info=trace_info)
         extra_out = ()
 
     def in_specs(inputs_tree):
         return compat.tree_map(lambda _: P(axis_name), inputs_tree)
 
     def run(inputs, state, round_offset=0):
+        # per-leaf carried-state layout (module docstring): identical spec
+        # tree in and out — the driver never reshards between rounds
+        state_spec_tree, _ = _resolve_state_specs(spec, state)
         fn = compat.shard_map(
             body,
             mesh=mesh,
-            in_specs=(in_specs(inputs), compat.tree_map(lambda _: P(), state), P()),
+            in_specs=(in_specs(inputs), state_spec_tree, P()),
             out_specs=(
-                compat.tree_map(lambda _: P(), state),
+                state_spec_tree,
                 P(),
                 P(),
             ) + extra_out,

@@ -164,6 +164,9 @@ def run_mapreduce_until(
         hash_fn=spec.hash_fn,
         capacity=spec.capacity,
         halt_fn=halt_fn,
+        # lifted single-round jobs fold the whole reduce output into state
+        # and hand it to halt_fn — replicated everywhere by construction
+        state_specs=P(),
     )
     return run_until(
         ispec, {"k": keys, "v": values}, init_state, mesh, axis_name,

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.driver import IterativeSpec, run_until
 from repro.core.engine import identity_hash
@@ -66,6 +66,9 @@ def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
         hash_fn=identity_hash,  # reducer = pattern_id % R
         capacity=chunk,  # lossless: a chunk may be all one pattern
         halt_fn=halt_fn,  # n_rounds is chosen per chunk by run_until
+        # running counts are tiny and the halt predicate reads them —
+        # explicitly replicated under the driver's two-tier state contract
+        state_specs=P(),
     )
 
 

@@ -167,6 +167,10 @@ def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
         capacity=-(-k // n_shards),
         n_rounds=n_rounds,
         halt_fn=halt_fn,
+        # the center table is small and every shard's map_fn reads all of
+        # it each round — replicated (P()) is the right layout, declared
+        # explicitly now that the driver supports per-leaf sharding
+        state_specs=P(),
     )
 
 

@@ -27,29 +27,41 @@ the shared loop state, never transmitted.
 
 Coalesced wire layout (default)
 -------------------------------
-The whole pytree crosses the boundary as ONE (R, 16·total_blocks) u32 wire:
-every leaf's word rows, padded up to its own ChaCha-block multiple, are
-concatenated on the word axis at STATIC per-leaf offsets, so one keystream
-launch encrypts/decrypts the buffer and exactly one `lax.all_to_all` moves
-it — per secure round, regardless of tree width (vs one collective per leaf
-and two launches per leaf on the per-leaf path). For a 3-leaf tree
+The whole pytree crosses the boundary as ONE (R, payload_words) u32 wire:
+every leaf's word rows are concatenated PACKED on the word axis at STATIC
+per-leaf offsets — no block-alignment pad travels — so one keystream launch
+encrypts/decrypts the buffer and exactly one `lax.all_to_all` moves it, per
+secure round, regardless of tree width (vs one collective per leaf and two
+launches per leaf on the per-leaf path). For a 3-leaf tree
 {k:(R,C) i32, s:(R,C,d) f32, c:(R,C) f32}:
 
     wire row i:  |<- leaf k ->|<--- leaf s --->|<- leaf c ->|
-    words        [ Wk | pad ]  [  Ws   | pad ]  [ Wc | pad ]
-    word offset  0            16·Bk             16·(Bk+Bs)
-    block ctr    c0+i·Bk+b     c0+R·Bk+i·Bs+b    c0+R·(Bk+Bs)+i·Bc+b
+    words        [    Wk    ]  [      Ws     ]  [    Wc    ]
+    word offset  0             Wk               Wk+Ws
+    block ctr    c0+i·Bk+b     c0+R·Bk+i·Bs+b   c0+R·(Bk+Bs)+i·Bc+b
 
 where W* = words_for(leaf row), B* = ceil(W*/16), b the intra-leaf block
-index, and c0 = counter0. Each leaf segment keeps the EXACT per-leaf
-counter assignment (leaf_offset + row·blocks_per_row + b), so the coalesced
-and per-leaf layouts draw bit-identical keystream per leaf region — they
-are cross-checkable ciphertexts, and the per-leaf path is retained as the
-differential oracle (`SecureShuffleConfig.coalesce=False`). The ≤15-word
-block-alignment pad per leaf carries encrypted zeros, i.e. raw keystream
-tail words of blocks whose payload words are already on the wire; those
-words were derived and discarded by the per-leaf path too, and CTR keystream
-words leak nothing about other words of the same or any other block.
+index, and c0 = counter0. KEYSTREAM, unlike payload, is derived in the
+block-ALIGNED virtual layout: one launch computes all 16·ΣB* words per row
+(ctr vectors below), and each leaf's first W* words are sliced out at its
+aligned offset 16·Σ preceding B* and XORed onto the packed segment. Each
+leaf region therefore keeps the EXACT per-leaf (key, nonce, counter)
+assignment (leaf_offset + row·blocks_per_row + b): the coalesced and
+per-leaf layouts draw bit-identical keystream per leaf region — they are
+cross-checkable ciphertexts, and the per-leaf path is retained as the
+differential oracle (`SecureShuffleConfig.coalesce=False`). Discarded
+keystream tail words (blocks whose payload ends mid-block) were derived
+and discarded by the per-leaf path too, and CTR keystream words leak
+nothing about other words of the same or any other block. The wire carries
+ZERO pad bytes (`record_wire_bytes` reports `pad_bytes == 0`); the only
+residual padding anywhere is `crypto/ctr.words_for`'s sub-word packing of
+narrow dtypes inside W* itself.
+
+Plaintext (`secure=None`) shuffles default to the SAME packed single-wire
+topology minus the crypt — one `lax.all_to_all` per round, zero keystream
+launches — so a secure-vs-plain jaxpr diff isolates the cryptography, not
+the wire shape; `resolve_coalesce(False)` restores the historical
+per-leaf collectives as the differential oracle.
 
 The per-(row, block) counter of the coalesced wire is not a single linear
 ramp, so `kernels/chacha20.chacha20_xor_rows_coalesced` takes vector
@@ -363,11 +375,13 @@ def _crypt_wires(wires, meta, cfg, nonce_ids, ctr_rows, round_id=None):
 
 @dataclass(frozen=True)
 class _WireLayout:
-    """Static unpack/counter metadata for a coalesced (R, 16·B) wire.
+    """Static unpack/counter metadata for a coalesced (R, payload_words) wire.
 
     leaves:      per-leaf (shape, dtype, narrow-pad, word_start, n_words,
-                 blocks) tuples — word_start is the leaf segment's offset on
-                 the wire's word axis (always a block boundary).
+                 blocks, ks_start) tuples — word_start is the leaf segment's
+                 offset on the PACKED wire's word axis (no alignment pad);
+                 ks_start = 16·Σ preceding blocks is the segment's offset in
+                 the block-ALIGNED keystream layout the crypt derives.
     ctr_base:    (total_blocks,) u32 — per-block counter base: the leaf's
                  counter-space offset (Σ preceding blocks·R, matching the
                  per-leaf path) + the intra-leaf block index. cfg.counter0
@@ -383,43 +397,44 @@ class _WireLayout:
 
     @property
     def total_words(self) -> int:
+        """Words of the block-aligned KEYSTREAM layout (≥ payload_words)."""
         return self.total_blocks * 16
 
     @property
     def payload_words(self) -> int:
+        """Words of the packed wire — exactly what crosses the link."""
         return sum(m[4] for m in self.leaves)
 
 
 def _pack_wire_coalesced(tree):
-    """Bitcast + concatenate the whole pytree into ONE (R, 16·B) u32 wire.
+    """Bitcast + concatenate the whole pytree into ONE packed u32 wire.
 
-    Each leaf's word rows are padded up to the leaf's own ChaCha-block
-    multiple (so every leaf segment starts at a block boundary and draws
-    the same keystream blocks as the per-leaf path) and concatenated on the
-    word axis at static offsets. Returns (wire, layout, treedef); the
-    layout carries the per-block counter vectors of the module docstring.
+    Leaf word rows are concatenated back-to-back on the word axis at static
+    offsets — leaf tails share blocks with the next leaf's head on the wire,
+    so ZERO block-alignment pad travels. The counter space stays the
+    block-aligned per-leaf assignment (the crypt slices each leaf's words
+    out of an aligned keystream; `_WireLayout`). Returns (wire, layout,
+    treedef).
     """
     leaves, treedef = jax.tree.flatten(tree)
     r = leaves[0].shape[0]
     segs, meta = [], []
-    word_off = 0  # wire word offset (block-aligned by construction)
+    word_off = 0  # PACKED wire word offset
     ctr_off = 0  # counter-space offset: Σ preceding blocks · R
+    ks_off = 0  # aligned-keystream word offset: 16 · Σ preceding blocks
     base_parts, mul_parts = [], []
     for leaf in leaves:
         pad = _ctr.pad_for(leaf.shape[1:], leaf.dtype)
         words = jax.vmap(lambda row: _ctr._to_words(row)[0])(leaf)
         n_words = words.shape[1]
         blocks = -(-n_words // 16)
-        tail = blocks * 16 - n_words
-        if tail:
-            words = jnp.concatenate(
-                [words, jnp.zeros((r, tail), jnp.uint32)], axis=1)
         segs.append(words)
-        meta.append((leaf.shape, leaf.dtype, pad, word_off, n_words, blocks))
+        meta.append((leaf.shape, leaf.dtype, pad, word_off, n_words, blocks, ks_off))
         base_parts.append(np.uint32(ctr_off) + np.arange(blocks, dtype=np.uint32))
         mul_parts.append(np.full((blocks,), blocks, np.uint32))
-        word_off += blocks * 16
+        word_off += n_words
         ctr_off += blocks * r
+        ks_off += blocks * 16
     wire = (jnp.concatenate(segs, axis=1) if segs
             else jnp.zeros((r, 0), jnp.uint32))
     layout = _WireLayout(
@@ -428,27 +443,44 @@ def _pack_wire_coalesced(tree):
                   else np.zeros((0,), np.uint32)),
         ctr_rowmul=(np.concatenate(mul_parts) if mul_parts
                     else np.zeros((0,), np.uint32)),
-        total_blocks=word_off // 16,
+        total_blocks=ks_off // 16,
     )
     return wire, layout, treedef
 
 
 def _unpack_wire_coalesced(wire, layout: _WireLayout, treedef):
     leaves = []
-    for shape, dtype, pad, word_start, n_words, _blocks in layout.leaves:
+    for shape, dtype, pad, word_start, n_words, _blocks, _ks in layout.leaves:
         words = lax.slice_in_dim(wire, word_start, word_start + n_words, axis=1)
         leaves.append(
             jax.vmap(lambda w: _ctr._from_words(w, shape[1:], dtype, pad))(words))
     return jax.tree.unflatten(treedef, leaves)
 
 
+def _packed_keystream(ks_aligned, layout: _WireLayout):
+    """Slice the packed wire's keystream out of the block-aligned keystream.
+
+    `ks_aligned` is (R, 16·total_blocks): each leaf's first n_words at its
+    aligned ks_start offset, concatenated, give the (R, payload_words)
+    keystream whose XOR with the packed wire reproduces the per-leaf
+    ciphertext bit-for-bit; the skipped tail words are discarded exactly as
+    the per-leaf path discards them.
+    """
+    segs = [lax.slice_in_dim(ks_aligned, m[6], m[6] + m[4], axis=1)
+            for m in layout.leaves]
+    return jnp.concatenate(segs, axis=1) if segs else ks_aligned[:, :0]
+
+
 def _crypt_wire_coalesced(wire, layout: _WireLayout, cfg, nonce_ids, ctr_rows,
                           round_id=None):
-    """XOR the whole coalesced wire with its keystream in ONE launch.
+    """XOR the packed coalesced wire with its keystream — ONE launch.
 
-    Block j of row i uses counter counter0 + ctr_base[j] + ctr_rowmul[j] ·
+    The keystream is derived in the block-aligned layout (XOR with zeros):
+    block j of row i uses counter counter0 + ctr_base[j] + ctr_rowmul[j] ·
     ctr_rows[i] and nonce word 0 XOR nonce_ids[i] — bit-identical per leaf
-    region to what `_crypt_wires` derives on the per-leaf path.
+    region to what `_crypt_wires` derives on the per-leaf path — then each
+    leaf's payload words are sliced out (`_packed_keystream`) and XORed onto
+    the packed wire, so no pad words travel.
     """
     if layout.total_blocks == 0:
         return wire
@@ -457,21 +489,23 @@ def _crypt_wire_coalesced(wire, layout: _WireLayout, cfg, nonce_ids, ctr_rows,
     ctr_base = jnp.uint32(cfg.counter0) + jnp.asarray(layout.ctr_base, jnp.uint32)
     ctr_rowmul = jnp.asarray(layout.ctr_rowmul, jnp.uint32)
     base_nonce = _round_nonce(cfg, round_id)
+    zeros = jnp.zeros((wire.shape[0], layout.total_words), jnp.uint32)
     if _HAVE_PALLAS:
         impl, interpret = resolve_chacha_impl(cfg.impl)
         state0 = make_state0(cfg.key_words, base_nonce, 0)
-        return chacha20_xor_rows_coalesced(wire, state0, nonce_ids, ctr_rows,
-                                           ctr_base, ctr_rowmul,
-                                           impl=impl, interpret=interpret)
+        ks = chacha20_xor_rows_coalesced(zeros, state0, nonce_ids, ctr_rows,
+                                         ctr_base, ctr_rowmul,
+                                         impl=impl, interpret=interpret)
+    else:  # pragma: no cover - exercised only without Pallas
+        key_words = jnp.asarray(cfg.key_words, jnp.uint32)
 
-    key_words = jnp.asarray(cfg.key_words, jnp.uint32)  # pragma: no cover
+        def one(nid, rc):
+            nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
+            counters = ctr_base + ctr_rowmul * rc
+            return chacha20_block_words(key_words, counters, nonce).reshape(-1)
 
-    def one(row, nid, rc):  # pragma: no cover - exercised only without Pallas
-        nonce = base_nonce.at[0].set(base_nonce[0] ^ nid)
-        counters = ctr_base + ctr_rowmul * rc
-        return row ^ chacha20_block_words(key_words, counters, nonce).reshape(-1)
-
-    return jax.vmap(one)(wire, nonce_ids, ctr_rows)  # pragma: no cover
+        ks = jax.vmap(one)(nonce_ids, ctr_rows)
+    return wire ^ _packed_keystream(ks, layout)
 
 
 class _WireAccounting:
@@ -557,26 +591,45 @@ class record_wire_bytes:
 
 
 def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = None,
-                     round_index=None):
+                     round_index=None, coalesce=None):
     """all_to_all every (R, C, ...) leaf; row i of the result came from source i.
 
     In secure mode leaves are packed to u32 wire words, encrypted, exchanged,
     decrypted, and unpacked — only ciphertext crosses the inter-chip link.
     With the default coalesced layout (`secure.coalesce`, module docstring)
-    the whole pytree travels as ONE wire buffer: one keystream launch each
-    side of exactly one `lax.all_to_all`, regardless of tree width; the
-    per-leaf layout (one collective and two launches per leaf) is kept as
-    the differential oracle. `round_index` (scalar, may be traced — e.g. a
-    `lax.scan` carry from the iterative driver) selects a disjoint keystream
-    per round; None is equivalent to round 0.
+    the whole pytree travels as ONE packed wire buffer (zero pad bytes): one
+    keystream launch each side of exactly one `lax.all_to_all`, regardless
+    of tree width; the per-leaf layout (one collective and two launches per
+    leaf) is kept as the differential oracle. Plaintext mode uses the SAME
+    wire topology minus the crypt, selected by `coalesce` (True | False |
+    None → 'auto', i.e. $REPRO_SHUFFLE_COALESCE, default True; in secure
+    mode the config's own `secure.coalesce` governs and `coalesce` is
+    ignored). `round_index` (scalar, may be traced — e.g. a `lax.scan`
+    carry from the iterative driver) selects a disjoint keystream per
+    round; None is equivalent to round 0.
     """
     if secure is None:
         leaves = jax.tree.leaves(tree)
+        raw_bytes = [l.size * l.dtype.itemsize for l in leaves]
+        if resolve_coalesce("auto" if coalesce is None else coalesce):
+            wire, layout, treedef = _pack_wire_coalesced(tree)
+            r = wire.shape[0]
+            wire_accounting.note(
+                secure=False,
+                nbytes=layout.payload_words * r * 4,
+                n_leaves=len(layout.leaves),
+                coalesced=True,
+                pad_bytes=0,
+                per_leaf=[m[4] * r * 4 for m in layout.leaves],
+                collectives=1,
+            )
+            wire = lax.all_to_all(wire, axis_name, 0, 0, tiled=True)
+            return _unpack_wire_coalesced(wire, layout, treedef)
         wire_accounting.note(
             secure=False,
-            nbytes=sum(l.size * l.dtype.itemsize for l in leaves),
+            nbytes=sum(raw_bytes),
             n_leaves=len(leaves),
-            per_leaf=[l.size * l.dtype.itemsize for l in leaves],
+            per_leaf=raw_bytes,
             collectives=len(leaves),
         )
         return jax.tree.map(lambda x: lax.all_to_all(x, axis_name, 0, 0, tiled=True), tree)
@@ -599,7 +652,7 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
             nbytes=sum(per_leaf),
             n_leaves=len(layout.leaves),
             coalesced=True,
-            pad_bytes=layout.total_words * r * 4 - sum(per_leaf),
+            pad_bytes=wire.shape[1] * r * 4 - sum(per_leaf),  # 0: packed wire
             per_leaf=per_leaf,
             collectives=1,
             keystream_launches=2,

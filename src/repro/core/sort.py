@@ -18,6 +18,14 @@ balanced (max reducer load within `balance`x of the fair share), so
 well-conditioned inputs pay for one round instead of a fixed refinement
 budget. Shapes are fixed every round, so each chunk is a single halt-masked
 `lax.scan` under shard_map.
+
+The (R, R·capacity) sorted table — by far the largest carried leaf — is
+declared SHARDED (`P(axis)`) by default via the driver's two-tier
+carried-state contract: each reducer keeps only its own row resident across
+rounds, the per-round `all_gather` that used to re-replicate the table is
+gone, and the full table materializes once, on the host, after the job
+(`$REPRO_STATE_SPECS=replicated` or `shard_state=False` restores the
+historical layout; outputs are bit-identical).
 """
 
 from __future__ import annotations
@@ -30,7 +38,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh
 
-from repro.core.driver import IterativeSpec, run_until
+from jax.sharding import PartitionSpec as P
+
+from repro.core.driver import IterativeSpec, resolve_state_mode, run_until
 from repro.core.engine import identity_hash
 from repro.core.shuffle import SecureShuffleConfig
 
@@ -53,20 +63,37 @@ def equidepth_edges(edges, counts):
 
 def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "data",
                           n_rounds: int = 2, halt_total: int | None = None,
-                          balance: float = 1.5) -> IterativeSpec:
+                          balance: float = 1.5,
+                          shard_state: str | bool = "auto") -> IterativeSpec:
     """Driver spec for sampling sort over `n_shards` reducers.
 
-    State: {"edges": (R+1,) f32 range-partition edges,
+    State: {"edges": (R+1,) f32 range-partition edges (replicated),
             "sorted": (R, R*capacity) f32 per-reducer sorted ranges
                       (+inf padding past each reducer's count),
-            "counts": (R,) f32 per-reducer received counts}.
+            "counts": (R,) f32 per-reducer received counts (replicated)}.
+
+    `shard_state` picks the layout of the big "sorted" table — the driver's
+    sharded-carried-state motivating workload. True/'sharded' (the 'auto'
+    default via $REPRO_STATE_SPECS, see `driver.resolve_state_mode`)
+    declares it `P(axis)`: each reducer keeps ONLY its own (1, R*capacity)
+    row resident across rounds and the per-round all_gather of the full
+    table disappears — per-device state shrinks ~Rx on an R-device mesh.
+    False/'replicated' keeps the historical every-shard-holds-everything
+    layout; the two are bit-identical after the final host gather (row i is
+    reducer i's local sort either way). Splitter edges and counts stay
+    replicated in both modes — refinement and halting read them.
 
     `halt_total` (the job's total record count) installs the refinement
     halt predicate: stop once a round received every record (lossless —
     counts sum to `halt_total`) AND no reducer holds more than `balance`
-    times the fair share. Both terms are functions of the replicated
-    `counts` table, satisfying the driver's replicated-halt contract.
+    times the fair share. Both terms are functions of the round's
+    replicated `counts` aux, satisfying the driver's replicated-halt
+    contract in either state layout.
     """
+    if isinstance(shard_state, bool):
+        sharded = shard_state
+    else:
+        sharded = resolve_state_mode(shard_state) == "sharded"
 
     def map_fn(state, inputs, r):
         v = inputs["v"]
@@ -81,12 +108,18 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
         local_sorted = jnp.sort(recv)  # invalids sort last as +inf
         local_count = jnp.sum(valid).astype(jnp.float32)
 
-        # client gather: every shard reassembles the full table (replication)
-        all_sorted = lax.all_gather(local_sorted, axis_name)
+        # counts must replicate (they drive refinement + halting) ...
         counts = lax.all_gather(local_count, axis_name)
+        if sharded:
+            # ... but the sorted table stays RESIDENT: this reducer's row is
+            # its local shard of the P(axis) leaf — no client gather
+            table = local_sorted[None, :]
+        else:
+            # client gather: every shard reassembles the full table
+            table = lax.all_gather(local_sorted, axis_name)
         new_state = {
             "edges": equidepth_edges(state["edges"], counts),
-            "sorted": all_sorted,
+            "sorted": table,
             "counts": counts,
         }
         return new_state, {"counts": counts}
@@ -107,6 +140,11 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
         capacity=capacity,
         n_rounds=n_rounds,
         halt_fn=halt_fn,
+        state_specs={
+            "edges": P(),
+            "sorted": P(axis_name) if sharded else P(),
+            "counts": P(),
+        },
     )
 
 
@@ -124,6 +162,7 @@ def sample_sort(
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
     coalesce: bool | None = None,
+    shard_state: str | bool = "auto",
 ):
     """Sort `values` (f32, sharded on the leading dim) via sampling sort.
 
@@ -139,8 +178,11 @@ def sample_sort(
     the partition is lossless and balanced within `balance`x of fair share
     — `len(dropped)` reports how many rounds actually executed.
     `chacha_impl` selects the secure keystream backend and `coalesce` the
-    secure wire layout (see `core/shuffle.py`); `loop_impl` the halt-loop
-    shape (`core/driver.py`).
+    wire layout (see `core/shuffle.py`); `loop_impl` the halt-loop shape
+    and `shard_state` the layout of the carried sorted table
+    (`make_sample_sort_spec`; 'auto' reads $REPRO_STATE_SPECS, default
+    sharded — bit-identical output either way, the sharded table is simply
+    gathered once at the end instead of every round).
     """
     values = jnp.asarray(values, jnp.float32)
     n = values.shape[0]
@@ -163,7 +205,8 @@ def sample_sort(
         "counts": jnp.zeros((r,), jnp.float32),
     }
     spec = make_sample_sort_spec(r, capacity, axis_name=axis_name,
-                                 halt_total=n, balance=balance)
+                                 halt_total=n, balance=balance,
+                                 shard_state=shard_state)
     # early-round overflow is the sampling phase working as designed, not a
     # sizing bug — keep the driver's per-round warning quiet and instead
     # surface the case that IS data loss: drops in the final executed round

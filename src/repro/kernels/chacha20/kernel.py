@@ -1,22 +1,24 @@
 """Pallas TPU kernel: ChaCha20-CTR keystream generation fused with XOR.
 
-Two message layouts share one ARX core (`_keystream_tile`):
+One ARX core (`_keystream_tile`), one data layout:
 
-  * BLOCK-ROW layout — (n_blocks, 16) u32, one ChaCha block per row,
-    little-endian word order (so word-wise XOR == byte-wise XOR of the RFC
-    serialization). The grid tiles rows; each program materializes its
-    tile's keystream as 16 vectors of shape (B, 1) and XORs in place. Kept
-    for the flat single-stream path (`chacha20_xor_blocks`).
   * BLOCK-LANE layout — (16, n_blocks) u32: word index on the sublane dim,
-    BLOCKS on the 128-wide lane dim. This is the shuffle hot path
-    (`chacha20_xor_row_lanes`): the 16 state words live as (1, L) vectors,
-    so every quarter-round step is an L-lane vector op and the compiled TPU
-    lowering uses all 128 lanes of each VREG instead of the 16/128 the
-    block-row layout filled (the historical 7/8-waste the ROADMAP named).
-    The per-(row, block) counter is `ctr_base[j] + ctr_rowmul[j] * row_ctr`
-    — vector per-block bases, which is what lets one launch cover a wire
-    buffer whose blocks belong to differently-strided per-leaf counter
-    segments (the coalesced secure shuffle).
+    BLOCKS on the 128-wide lane dim. Every entry point lowers onto this
+    kernel (`chacha20_xor_row_lanes`): the 16 state words live as (1, L)
+    vectors, so every quarter-round step is an L-lane vector op and the
+    compiled TPU lowering uses all 128 lanes of each VREG instead of the
+    16/128 the historical block-row layout filled (the 7/8-waste the
+    ROADMAP named). The per-(row, block) counter is
+    `ctr_base[j] + ctr_rowmul[j] * row_ctr` — vector per-block bases, which
+    is what lets one launch cover a wire buffer whose blocks belong to
+    differently-strided per-leaf counter segments (the coalesced secure
+    shuffle).
+  * The BLOCK-ROW call surfaces — (n_blocks, 16) single-stream
+    `chacha20_xor_blocks` (the `ctr_crypt_array` path) and (R, n_blocks, 16)
+    batched `chacha20_xor_row_blocks` — are thin transposing wrappers over
+    the lane kernel: block counters become the contiguous special case
+    (base = iota, rowmul = 1), so the flat path gets the same full-lane
+    utilization as the shuffle hot path and the keystreams cannot drift.
 
 TPU mapping notes:
   * ARX only: add / xor / rotl on u32 — pure VPU lanework, MXU idle; the
@@ -75,24 +77,6 @@ def _keystream_tile(init, axis: int = 1):
     return jnp.concatenate([x + x0 for x, x0 in zip(xs, init)], axis=axis)
 
 
-def _chacha20_tile_kernel(state0_ref, x_ref, y_ref, *, block_rows: int):
-    pid = pl.program_id(0)
-    s0 = state0_ref[...]  # (16,) u32 template: const | key | counter0 | nonce
-
-    # Per-row block counters for this tile.
-    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1), 0)
-    ctr = s0[12] + jnp.uint32(block_rows) * pid.astype(jnp.uint32) + row
-
-    init = []
-    for i in range(16):
-        if i == 12:
-            init.append(ctr)
-        else:
-            init.append(jnp.broadcast_to(s0[i], (block_rows, 1)))
-
-    y_ref[...] = x_ref[...] ^ _keystream_tile(init)
-
-
 def chacha20_xor_blocks(
     x_blocks: jax.Array,
     state0: jax.Array,
@@ -105,22 +89,29 @@ def chacha20_xor_blocks(
     `state0` is the 16-word template state (constants, key, counter0, nonce);
     row i uses block counter state0[12] + i. n_blocks must be a multiple of
     block_rows (ops.py pads).
+
+    Since the lane re-tiling this is a thin wrapper over the BLOCK-LANE
+    kernel: the message transposes into one (1, 16, n_blocks) lane-layout
+    row whose per-block counters are the contiguous special case
+    `state0[12] + iota` (nonce id 0 leaves the template nonce untouched), so
+    the flat single-stream path — `ctr_crypt_array` via
+    `ops.chacha20_xor_words` — runs at full 128-lane VREG utilization
+    instead of the 16/128 the retired block-row grid filled.
     """
     n_blocks = x_blocks.shape[0]
     assert x_blocks.shape[1] == 16 and x_blocks.dtype == jnp.uint32
     assert n_blocks % block_rows == 0, (n_blocks, block_rows)
-    grid = (n_blocks // block_rows,)
-    return pl.pallas_call(
-        functools.partial(_chacha20_tile_kernel, block_rows=block_rows),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((16,), lambda i: (0,)),  # template state, replicated
-            pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, 16), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, 16), jnp.uint32),
+    y = chacha20_xor_row_lanes(
+        jnp.swapaxes(x_blocks, 0, 1)[None],       # (1, 16, n_blocks)
+        state0,
+        jnp.zeros((1,), jnp.uint32),              # nonce XOR id 0
+        state0[12:13],                            # per-row ctr operand = counter0
+        jnp.arange(n_blocks, dtype=jnp.uint32),   # intra-stream block index
+        jnp.ones((n_blocks,), jnp.uint32),        # contiguous stride
+        block_lanes=block_rows,
         interpret=interpret,
-    )(state0, x_blocks)
+    )
+    return jnp.swapaxes(y[0], 0, 1)
 
 
 def _chacha20_lanes_tile_kernel(state0_ref, nid_ref, row_ref, base_ref,

@@ -80,7 +80,15 @@ def chacha20_xor_words(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ) -> jax.Array:
-    """XOR a flat (n,) u32 word stream with the keystream starting at state0."""
+    """XOR a flat (n,) u32 word stream with the keystream starting at state0.
+
+    Block i draws counter state0[12] + i. Lowers onto the BLOCK-LANE kernel
+    as one single-row lane-layout launch (contiguous counters: base = iota,
+    rowmul = 1) with the same `_lane_tile` policy as the shuffle wrappers —
+    interpret mode takes ONE tile over the whole padded block count, so the
+    flat `ctr_crypt_array` path shares both the full-lane compiled lowering
+    and the fast interpret shape with the wire hot path.
+    """
     n = words.shape[0]
     n_blocks = -(-n // 16)
     if impl == "jnp" or n_blocks == 0:
@@ -88,14 +96,15 @@ def chacha20_xor_words(
 
         ks = chacha20_keystream_words(state0[4:12], state0[13:16], state0[12], n)
         return words ^ ks
-    rows = block_rows
-    if n_blocks < rows:
-        # Small payloads: shrink tile to the padded block count (≥ 8 rows).
-        rows = max(8, 1 << (n_blocks - 1).bit_length())
-    pad_blocks = (-n_blocks) % rows
-    total = (n_blocks + pad_blocks) * 16
-    x = jnp.concatenate([words, jnp.zeros((total - n,), jnp.uint32)]).reshape(-1, 16)
-    y = chacha20_xor_blocks(x, state0, block_rows=rows, interpret=interpret)
+    lanes = _lane_tile(n_blocks, block_rows, interpret)
+    x = jnp.concatenate(
+        [words, jnp.zeros((n_blocks * 16 - n,), jnp.uint32)]).reshape(1, -1, 16)
+    y = _xor_lanes(x, state0,
+                   jnp.zeros((1,), jnp.uint32),             # nonce XOR id 0
+                   state0[12:13],                           # ctr operand = counter0
+                   jnp.arange(n_blocks, dtype=jnp.uint32),  # contiguous block index
+                   jnp.ones((n_blocks,), jnp.uint32),
+                   lanes, interpret)
     return y.reshape(-1)[:n]
 
 

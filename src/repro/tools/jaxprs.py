@@ -32,6 +32,17 @@ def _sub_jaxprs(value: Any) -> Iterator[Any]:
             yield from _sub_jaxprs(v)
 
 
+# Cross-shard communication primitives, by jaxpr name. The superset a
+# shard_map program can emit for the collectives this repo uses (psum
+# lowers as psum on current jax, all_reduce on some versions); counting
+# them ALL is what lets a test assert "this change introduced zero new
+# collectives of any kind", not just "the one I removed is gone".
+COLLECTIVE_PRIMITIVES = (
+    "all_to_all", "all_gather", "psum", "all_reduce", "reduce_scatter",
+    "ppermute", "pbroadcast",
+)
+
+
 def count_primitives(jaxpr, name: str) -> int:
     """Count eqns whose primitive is `name`, recursing into nested jaxprs.
 
@@ -42,16 +53,36 @@ def count_primitives(jaxpr, name: str) -> int:
     primitive appears per execution of the outer program (conditional
     branches are an over-approximation: each branch is counted).
     """
+    return count_many(jaxpr, (name,))[name]
+
+
+def count_many(jaxpr, names) -> dict:
+    """Count several primitives in ONE jaxpr walk: {name: count}.
+
+    Same recursion/over-approximation semantics as `count_primitives`.
+    """
     if isinstance(jaxpr, _core.ClosedJaxpr):
         jaxpr = jaxpr.jaxpr
-    n = 0
+    counts = dict.fromkeys(names, 0)
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
         for v in eqn.params.values():
             for sub in _sub_jaxprs(v):
-                n += count_primitives(sub, name)
-    return n
+                for k, n in count_many(sub, names).items():
+                    counts[k] += n
+    return counts
+
+
+def collective_counts(jaxpr) -> dict:
+    """Count every known collective primitive: {name: count}.
+
+    The structural-proof helper behind the sharded-carried-state tests:
+    comparing two traced programs' dicts shows exactly which collectives a
+    change added or removed — e.g. that porting a state leaf to `P(axis)`
+    deletes the per-round `all_gather` and introduces nothing else.
+    """
+    return count_many(jaxpr, COLLECTIVE_PRIMITIVES)
 
 
 def count_in_fn(fn, name: str, *args, **kwargs) -> int:

@@ -15,6 +15,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh
 from repro.core.driver import IterativeSpec, make_iterative_runner, run_until
@@ -81,6 +82,71 @@ def test_donating_runner_consumes_state_not_inputs():
     out2, _, _ = runner(inputs, out_state, 2)
     assert out_state.is_deleted()
     np.testing.assert_array_equal(np.asarray(out2), np.full((4,), 4.0, np.float32))
+
+
+def _sharded_state_spec(halt_at: float | None = None) -> IterativeSpec:
+    """Mixed-tier state: 'big' is a resident P(axis) leaf, 'tot' replicated.
+    Donation must alias BOTH — sharded leaves stay resident on their devices
+    with zero copies between chunks (module docstring: DONATION)."""
+
+    def map_fn(state, inputs, r):
+        return inputs["k"], {"v": inputs["v"]}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        got = jax.lax.psum(jnp.sum(jnp.where(valid, rv["v"], 0.0)), "data")
+        return ({"big": state["big"] + got, "tot": state["tot"] + got},
+                {"total": state["tot"] + got})
+
+    halt_fn = None
+    if halt_at is not None:
+        def halt_fn(state, aux, r):
+            return aux["total"] >= halt_at
+
+    return IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn,
+                         hash_fn=identity_hash, capacity=4, n_rounds=2,
+                         halt_fn=halt_fn,
+                         state_specs={"big": P("data"), "tot": P()})
+
+
+def _sharded_state():
+    return {"big": jnp.zeros((1, 8), jnp.float32), "tot": jnp.float32(0.0)}
+
+
+def test_donation_consumes_sharded_state_leaves():
+    """Donation is layout-agnostic: a P(axis) carried leaf is aliased in the
+    lowering and consumed at runtime exactly like a replicated one."""
+    mesh = make_mesh((1,), ("data",))
+    spec = _sharded_state_spec()
+    inputs = _inputs()
+    runner = make_iterative_runner(spec, mesh, donate_state=True)
+    state = _sharded_state()
+    txt = runner.jitted.lower(inputs, state, jnp.uint32(0)).as_text()
+    assert txt.count("tf.aliasing_output") >= 2  # both leaves aliased
+    out_state, aux, dropped = runner(inputs, state, 0)
+    assert state["big"].is_deleted() and state["tot"].is_deleted()
+    # chunk-loop shape: the output re-donates cleanly, sharded leaf included
+    out2, _, _ = runner(inputs, out_state, 2)
+    assert out_state["big"].is_deleted() and out_state["tot"].is_deleted()
+    np.testing.assert_array_equal(np.asarray(out2["big"]),
+                                  np.full((1, 8), 16.0, np.float32))
+
+
+def test_run_until_donates_sharded_state_but_preserves_callers():
+    """run_until's chunk loop with a sharded leaf: the caller's init_state
+    survives, and donating matches the non-donating path bit for bit."""
+    mesh = make_mesh((1,), ("data",))
+    spec = _sharded_state_spec(halt_at=7.5)
+    inputs = _inputs()
+    init = _sharded_state()
+    res = run_until(spec, inputs, init, mesh, max_rounds=8, min_chunk=1)
+    assert not init["big"].is_deleted() and not init["tot"].is_deleted()
+    assert res.halted and res.rounds_executed == 2
+    ref = run_until(spec, inputs, init, mesh, max_rounds=8, min_chunk=1,
+                    donate_state=False)
+    np.testing.assert_array_equal(np.asarray(res.state["big"]),
+                                  np.asarray(ref.state["big"]))
+    np.testing.assert_array_equal(np.asarray(res.state["tot"]),
+                                  np.asarray(ref.state["tot"]))
 
 
 def test_run_until_donates_but_preserves_callers_state():

@@ -271,6 +271,33 @@ def test_overflow_warning_global_round_index_through_run_until():
                   _mesh1(), max_rounds=4, round_offset=10)
 
 
+def test_overflow_warning_global_index_in_later_multiround_chunk():
+    """Regression for chunk-relative indices: an overflow deep inside a
+    LATER chunk must be reported by its GLOBAL round index. With min_chunk=2
+    and growth=2, rounds split into chunks [0,1] and [2..5]; the overflow at
+    global round 5 sits at chunk-relative index 3 of the second chunk, and
+    the warning must say 'round 5', never 'round 3'."""
+
+    def map_fn(state, inputs, r):
+        ks = jnp.arange(6, dtype=jnp.int32)
+        keys = jnp.where(r == 5, jnp.zeros_like(ks), jnp.where(ks < 2, 0, -1))
+        return keys, {"v": jnp.ones((6,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        return state, {"r": r}
+
+    spec = IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=2, n_rounds=1)
+    with pytest.warns(RuntimeWarning) as recs:
+        run_until(spec, {"x": jnp.zeros((6,), jnp.float32)}, jnp.float32(0.0),
+                  _mesh1(), max_rounds=6, min_chunk=2, growth=2)
+    msgs = [str(w.message) for w in recs
+            if "shuffle overflow" in str(w.message)]
+    assert len(msgs) == 1, msgs
+    assert "round 5: n_dropped=4" in msgs[0]
+    assert "round 3" not in msgs[0]
+
+
 # --- workloads through run_until ---------------------------------------------
 
 

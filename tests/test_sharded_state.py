@@ -1,0 +1,332 @@
+"""Sharded carried state: the driver's two-tier (replicated | sharded) contract.
+
+`IterativeSpec.state_specs` lets any carried-state leaf stay `P(axis)`-sharded
+across rounds instead of being re-replicated by an all_gather every round.
+These tests pin the contract from every side:
+
+  * STRUCTURAL PROOF (jaxpr, not accounting): a sharded sort round traces
+    exactly ONE all_to_all — secure AND plaintext — and exactly one fewer
+    all_gather than the replicated layout, with ZERO other collectives of
+    any kind added or removed (`repro.tools.jaxprs.collective_counts`).
+  * BIT-IDENTITY: sharded and replicated layouts produce identical final
+    state after the final host gather — swept over mixed `P()`/`P(axis)`
+    trees, u32/f32/bf16 resident leaves, and halt-early vs full-budget
+    chunked runs (multi-device subprocess, like tests/test_driver.py).
+  * HALT GUARD: `halt_fn` touching a sharded leaf raises a trace-time
+    ValueError naming the leaf (a shard-varying predicate would deadlock
+    the mesh), while replicated leaves and aux stay usable.
+  * SPEC RESOLUTION: None defaults to all-`P()`, a bare PartitionSpec
+    broadcasts, structure mismatches and non-PartitionSpec leaves raise at
+    build time; `resolve_state_mode` honors $REPRO_STATE_SPECS the same way
+    the chacha/coalesce selectors honor theirs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from conftest import run_in_subprocess as _run
+from repro.compat import make_mesh
+from repro.core.driver import (
+    STATE_SPECS_ENV,
+    IterativeSpec,
+    _resolve_state_specs,
+    make_iterative_runner,
+    resolve_state_mode,
+    run_until,
+)
+from repro.core.engine import identity_hash
+from repro.core.shuffle import SecureShuffleConfig
+from repro.core.sort import make_sample_sort_spec
+from repro.crypto import chacha
+from repro.tools.jaxprs import collective_counts
+
+
+def _mesh1():
+    return make_mesh((1,), ("data",))
+
+
+def _secure_cfg():
+    return SecureShuffleConfig(
+        key_words=chacha.key_to_words(bytes(range(32))),
+        nonce_words=chacha.nonce_to_words(b"\x13" * 12),
+        counter0=9,
+        impl="pallas-interpret",
+    )
+
+
+def _dummy_spec(**kw) -> IterativeSpec:
+    """Spec shell for resolution tests (fns never called)."""
+    return IterativeSpec(map_fn=lambda *a: None, reduce_fn=lambda *a: None, **kw)
+
+
+# --- selector / spec resolution -----------------------------------------------
+
+
+def test_resolve_state_mode_env_and_explicit(monkeypatch):
+    monkeypatch.delenv(STATE_SPECS_ENV, raising=False)
+    assert resolve_state_mode("auto") == "sharded"
+    assert resolve_state_mode(None) == "sharded"
+    assert resolve_state_mode("replicated") == "replicated"
+
+    monkeypatch.setenv(STATE_SPECS_ENV, "replicated")
+    assert resolve_state_mode("auto") == "replicated"
+    # an explicit mode always wins over the environment
+    assert resolve_state_mode("sharded") == "sharded"
+
+    monkeypatch.setenv(STATE_SPECS_ENV, "sideways")
+    with pytest.raises(ValueError, match=rf"\${STATE_SPECS_ENV}='sideways'"):
+        resolve_state_mode("auto")
+    monkeypatch.delenv(STATE_SPECS_ENV, raising=False)
+    with pytest.raises(ValueError) as ei:
+        resolve_state_mode("sideways")
+    assert STATE_SPECS_ENV not in str(ei.value)
+
+
+def test_state_specs_none_and_bare_spec_broadcast():
+    state = {"a": jnp.zeros((2,)), "b": {"c": jnp.zeros((3,))}}
+    tree, sharded = _resolve_state_specs(_dummy_spec(), state)
+    assert jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)) == [P(), P()]
+    assert sharded == [False, False]
+    # a single bare PartitionSpec broadcasts to every leaf
+    tree, sharded = _resolve_state_specs(_dummy_spec(state_specs=P("data")), state)
+    assert sharded == [True, True]
+    tree, sharded = _resolve_state_specs(_dummy_spec(state_specs=P()), state)
+    assert sharded == [False, False]
+    # per-leaf trees may mix tiers, and a None leaf means replicated
+    tree, sharded = _resolve_state_specs(
+        _dummy_spec(state_specs={"a": P("data"), "b": {"c": None}}), state)
+    assert sharded == [True, False]
+
+
+def test_state_specs_structure_mismatch_and_bad_leaf_raise():
+    state = {"a": jnp.zeros((2,)), "b": jnp.zeros((3,))}
+    with pytest.raises(ValueError, match="state_specs"):
+        _resolve_state_specs(_dummy_spec(state_specs={"a": P()}), state)
+    with pytest.raises(ValueError, match="PartitionSpec"):
+        _resolve_state_specs(_dummy_spec(state_specs={"a": P(), "b": "data"}), state)
+
+
+def test_runner_rejects_mismatched_state_specs_at_dispatch():
+    spec = _counting_spec(sharded=True)
+    spec = IterativeSpec(
+        map_fn=spec.map_fn, reduce_fn=spec.reduce_fn, hash_fn=spec.hash_fn,
+        capacity=spec.capacity, n_rounds=spec.n_rounds,
+        state_specs={"wrong_key": P()})
+    runner = make_iterative_runner(spec, _mesh1())
+    with pytest.raises(ValueError, match="state_specs"):
+        runner(_INPUTS, _counting_state())
+
+
+# --- structural proof: sharded sort round collectives -------------------------
+
+
+def _sort_jaxpr_counts(shard_state: bool, secure):
+    """Collective counts of one traced sort chunk on a 1-axis mesh."""
+    mesh = _mesh1()
+    r, n = 1, 32
+    spec = make_sample_sort_spec(r, n, halt_total=n, shard_state=shard_state)
+    runner = make_iterative_runner(spec, mesh, secure=secure)
+    inputs = {"v": jnp.zeros((n,), jnp.float32)}
+    state = {
+        "edges": jnp.zeros((r + 1,), jnp.float32),
+        "sorted": jnp.full((r, r * n), jnp.inf, jnp.float32),
+        "counts": jnp.zeros((r,), jnp.float32),
+    }
+    jaxpr = jax.make_jaxpr(runner.abstract_fn)(inputs, state, jnp.uint32(0))
+    return collective_counts(jaxpr)
+
+
+@pytest.mark.parametrize("secure", [False, True], ids=["plaintext", "secure"])
+def test_jaxpr_sharded_sort_round_drops_all_gather_only(secure):
+    """The tentpole's acceptance proof: porting the sort table to `P(axis)`
+    removes exactly ONE all_gather per round (the table re-replication) and
+    changes NOTHING else — still exactly one all_to_all per round, secure
+    and plaintext alike, and zero collectives of any other kind appear."""
+    cfg = _secure_cfg() if secure else None
+    sharded = _sort_jaxpr_counts(True, cfg)
+    replicated = _sort_jaxpr_counts(False, cfg)
+    # the wire stays a single coalesced all_to_all in both layouts
+    assert sharded["all_to_all"] == replicated["all_to_all"] == 1
+    # the per-round table all_gather is GONE (counts-gather remains)
+    assert replicated["all_gather"] == sharded["all_gather"] + 1
+    assert sharded["all_gather"] >= 1
+    # ... and nothing else moved: no new collective of any kind
+    for name in sharded:
+        if name != "all_gather":
+            assert sharded[name] == replicated[name], name
+
+
+# --- halt guard ---------------------------------------------------------------
+
+
+def _counting_state():
+    return {"big": jnp.zeros((1, 4), jnp.float32), "tot": jnp.float32(0.0)}
+
+
+_INPUTS = {"x": jnp.zeros((4,), jnp.float32)}
+
+
+def _counting_spec(sharded: bool, halt_fn=None) -> IterativeSpec:
+    """1-shard job: 'big' is a resident per-reducer row, 'tot' a replicated
+    running total (psum'd). On a 1-device mesh the sharded local shard and
+    the replicated value coincide, so the same fns serve both layouts."""
+
+    def map_fn(state, inputs, r):
+        return jnp.zeros((4,), jnp.int32), {"v": jnp.ones((4,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        got = lax.psum(jnp.sum(jnp.where(valid, rv["v"], 0.0)), "data")
+        return ({"big": state["big"] + got, "tot": state["tot"] + got},
+                {"t": got})
+
+    return IterativeSpec(
+        map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash, capacity=4,
+        n_rounds=2, halt_fn=halt_fn,
+        state_specs={"big": P("data") if sharded else P(), "tot": P()})
+
+
+def test_halt_fn_touching_sharded_leaf_raises_at_trace_time():
+    spec = _counting_spec(
+        sharded=True, halt_fn=lambda state, aux, r: jnp.sum(state["big"]) > 9.0)
+    runner = make_iterative_runner(spec, _mesh1())
+    with pytest.raises(ValueError, match=r"SHARDED carried-state leaf "
+                                         r"state\['big'\]"):
+        runner(_INPUTS, _counting_state())
+
+
+def test_halt_fn_on_replicated_leaves_still_works_alongside_sharded():
+    """Replicated leaves, aux, and the round index stay fully usable in
+    halt_fn even when a sibling leaf is sharded-and-guarded."""
+    spec = _counting_spec(
+        sharded=True,
+        halt_fn=lambda state, aux, r: (state["tot"] + aux["t"] * 0 >= 8.0))
+    res = run_until(spec, _INPUTS, _counting_state(), _mesh1(), max_rounds=6)
+    assert res.halted and res.rounds_executed == 2  # tot: 4.0 then 8.0
+    np.testing.assert_array_equal(np.asarray(res.state["big"]),
+                                  np.full((1, 4), 8.0, np.float32))
+
+
+def test_sharded_and_replicated_layouts_bit_identical_1dev():
+    """Smoke-level bit-identity (the real multi-device sweep runs below in a
+    subprocess): same job, both layouts, identical state and aux."""
+    halt = lambda state, aux, r: state["tot"] >= 12.0
+    out = {}
+    for sharded in (False, True):
+        res = run_until(_counting_spec(sharded, halt_fn=halt), _INPUTS,
+                        _counting_state(), _mesh1(), max_rounds=8, min_chunk=2)
+        out[sharded] = res
+    assert out[True].rounds_executed == out[False].rounds_executed == 3
+    np.testing.assert_array_equal(np.asarray(out[True].state["big"]),
+                                  np.asarray(out[False].state["big"]))
+    np.testing.assert_array_equal(np.asarray(out[True].aux["t"]),
+                                  np.asarray(out[False].aux["t"]))
+
+
+# --- sort spec wiring ---------------------------------------------------------
+
+
+def test_sort_spec_state_specs_follow_shard_state(monkeypatch):
+    assert make_sample_sort_spec(2, 4, shard_state=True).state_specs["sorted"] == P("data")
+    assert make_sample_sort_spec(2, 4, shard_state=False).state_specs["sorted"] == P()
+    monkeypatch.delenv(STATE_SPECS_ENV, raising=False)
+    auto = make_sample_sort_spec(2, 4)  # 'auto' → env default 'sharded'
+    assert auto.state_specs["sorted"] == P("data")
+    monkeypatch.setenv(STATE_SPECS_ENV, "replicated")
+    assert make_sample_sort_spec(2, 4).state_specs["sorted"] == P()
+    # edges/counts drive refinement + halting: replicated in BOTH layouts
+    for spec in (auto, make_sample_sort_spec(2, 4, shard_state=True)):
+        assert spec.state_specs["edges"] == P()
+        assert spec.state_specs["counts"] == P()
+
+
+# --- multi-device: bit-identity sweep + sort end-to-end -----------------------
+
+
+def test_sharded_state_property_sweep_multidev():
+    """Mixed P()/P(axis) trees x u32/f32/bf16 resident leaves x halt-early vs
+    full-budget chunked runs: sharded and replicated layouts are bit-identical
+    after the final gather, on a real 4-way mesh, with run_until's default
+    state donation in force."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh
+    from repro.core.driver import IterativeSpec, run_until
+    from repro.core.engine import identity_hash
+
+    R, C = 4, 8
+    mesh = make_mesh((R,), ("data",))
+    inputs = {"x": jnp.zeros((R,), jnp.float32)}
+
+    def make_spec(dtype, sharded, halt_at):
+        def map_fn(state, inputs, r):
+            # every shard sends one unit item to every reducer
+            return jnp.arange(R, dtype=jnp.int32), {"v": jnp.ones((R,), jnp.float32)}
+
+        def reduce_fn(state, rk, rv, valid, r):
+            got = jnp.sum(jnp.where(valid, rv["v"], 0.0))      # local: R items
+            tot = state["tot"] + lax.psum(got, "data")
+            inc = got.astype(dtype)
+            if sharded:
+                big = state["big"] + inc                       # local (1, C) row
+            else:
+                row = state["big"][lax.axis_index("data")] + inc
+                big = lax.all_gather(row, "data")              # re-replicate
+            return {"big": big, "tot": tot}, {"tot": tot}
+
+        halt_fn = None
+        if halt_at is not None:
+            halt_fn = lambda state, aux, r: aux["tot"] >= halt_at
+        return IterativeSpec(
+            map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+            capacity=R, n_rounds=1, halt_fn=halt_fn,
+            state_specs={"big": P("data") if sharded else P(), "tot": P()})
+
+    for dtype in (jnp.uint32, jnp.float32, jnp.bfloat16):
+        # halt at 3 executed rounds (tot grows R*R per round) vs full budget
+        for halt_at in (3.0 * R * R, None):
+            out = {}
+            for sharded in (False, True):
+                init = {"big": jnp.zeros((R, C), dtype), "tot": jnp.float32(0.0)}
+                res = run_until(make_spec(dtype, sharded, halt_at), inputs, init,
+                                mesh, max_rounds=5, min_chunk=2)
+                out[sharded] = (np.asarray(res.state["big"]),
+                                float(res.state["tot"]),
+                                res.rounds_executed, res.halted)
+            rep, sh = out[False], out[True]
+            np.testing.assert_array_equal(rep[0], sh[0])
+            assert rep[1:] == sh[1:], (dtype, halt_at, rep, sh)
+            want_rounds = 3 if halt_at is not None else 5
+            assert sh[2] == want_rounds and sh[3] == (halt_at is not None)
+    print("OK")
+    """, devices=4)
+
+
+def test_sample_sort_8dev_bit_identical_sharded_vs_replicated():
+    """End-to-end acceptance: the 8-device sampling sort returns identical
+    output/counts/drop history with the resident-sharded table and with the
+    historical replicated one."""
+    _run("""
+    import numpy as np, jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.core.sort import sample_sort
+    mesh = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(3)
+    v = (rng.exponential(scale=0.15, size=512) % 1.0).astype(np.float32)
+    out = {}
+    for sharded in (False, True):
+        out[sharded] = sample_sort(v, mesh, n_rounds=3, capacity=16,
+                                   lo=0.0, hi=1.0, shard_state=sharded)
+    np.testing.assert_array_equal(out[True][0], out[False][0])
+    np.testing.assert_array_equal(out[True][1], out[False][1])
+    np.testing.assert_array_equal(np.asarray(out[True][2]),
+                                  np.asarray(out[False][2]))
+    np.testing.assert_array_equal(out[True][0], np.sort(v))
+    print("OK")
+    """)

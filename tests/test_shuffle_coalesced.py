@@ -1,13 +1,16 @@
 """Layout-equivalence tests: coalesced single-wire vs per-leaf secure shuffle.
 
-The coalesced wire concatenates every leaf's block-aligned word rows into
-ONE (R, 16·B) buffer, encrypts it with one keystream launch whose per-block
-counter bases reproduce the per-leaf counter assignment, and moves it with
-exactly one `lax.all_to_all` per round. These tests prove the two layouts
-are interchangeable at the BIT level — identical ciphertext per leaf region,
-identical decrypted trees, identical multi-round k-means — across leaf
-dtypes (u32/i32/f32/bf16), odd word counts, round ids, and both keystream
-impls; and they prove the structural claim (one collective, two launches per
+The coalesced wire concatenates every leaf's word rows PACKED into ONE
+(R, payload_words) buffer — zero pad bytes travel — encrypts it with one
+keystream launch whose per-block counter bases reproduce the per-leaf
+counter assignment (keystream is derived block-aligned and sliced to the
+packed payload), and moves it with exactly one `lax.all_to_all` per round;
+plaintext mode shares the same packed wire topology minus the crypt. These
+tests prove the layouts are interchangeable at the BIT level — identical
+ciphertext per leaf region, identical decrypted trees, identical
+multi-round k-means — across leaf dtypes (u32/i32/f32/bf16), odd word
+counts, round ids, and both keystream impls; and they prove the structural
+claims (one collective per round, secure AND plaintext; two launches per
 secure round) by jaxpr inspection, not accounting.
 
 Property tests use hypothesis when installed and the seeded deterministic
@@ -87,7 +90,7 @@ def test_coalesced_ciphertext_matches_per_leaf_segments(seed, round_id):
         enc_co = np.asarray(shuffle._crypt_wire_coalesced(
             wire, layout, _cfg(impl), nonce_ids, ctr_rows, rid))
         for leaf_ct, m in zip(enc_leaf, layout.leaves):
-            _shape, _dtype, _pad, word_start, n_words, _blocks = m
+            _shape, _dtype, _pad, word_start, n_words, _blocks, _ks = m
             np.testing.assert_array_equal(
                 np.asarray(leaf_ct), enc_co[:, word_start:word_start + n_words])
         out[impl] = enc_co
@@ -119,9 +122,10 @@ def test_coalesced_cross_impl_roundtrip(seed):
 
 
 def test_coalesced_layout_block_alignment():
-    """Static layout facts: segments start at block boundaries, counter
-    bases reproduce the per-leaf offsets (Σ preceding blocks·R), rowmuls
-    carry each leaf's blocks-per-row, zero-size leaves contribute nothing."""
+    """Static layout facts: wire segments are PACKED (zero alignment pad on
+    the wire), keystream segments start at block boundaries, counter bases
+    reproduce the per-leaf offsets (Σ preceding blocks·R), rowmuls carry
+    each leaf's blocks-per-row, zero-size leaves contribute nothing."""
     r, c = 3, 5
     tree = {
         "a": jnp.zeros((r, c), jnp.int32),        # 5 words  -> 1 block
@@ -129,12 +133,15 @@ def test_coalesced_layout_block_alignment():
         "e": jnp.zeros((r, c, 0), jnp.float32),   # 0 words  -> 0 blocks
     }
     wire, layout, _ = shuffle._pack_wire_coalesced(tree)
-    assert wire.shape == (r, layout.total_words)
-    assert layout.total_blocks == 4 and layout.total_words == 64
+    # the wire carries exactly the payload words, back-to-back
+    assert wire.shape == (r, layout.payload_words)
     assert layout.payload_words == 5 + 35 + 0
+    # the keystream layout stays block-aligned: 4 blocks = 64 words
+    assert layout.total_blocks == 4 and layout.total_words == 64
     by_start = sorted(layout.leaves, key=lambda m: m[3])
-    assert [m[3] for m in by_start] == [0, 16, 64]  # a, b, e word offsets
-    assert all(m[3] % 16 == 0 for m in layout.leaves)
+    assert [m[3] for m in by_start] == [0, 5, 40]   # packed wire offsets
+    assert [m[6] for m in by_start] == [0, 16, 64]  # aligned keystream offsets
+    assert all(m[6] % 16 == 0 for m in layout.leaves)
     np.testing.assert_array_equal(
         layout.ctr_base, np.array([0, 1 * r + 0, 1 * r + 1, 1 * r + 2], np.uint32))
     np.testing.assert_array_equal(
@@ -145,46 +152,51 @@ def test_coalesced_layout_block_alignment():
 
 
 def test_keyed_all_to_all_layouts_agree_end_to_end():
-    """Plain, coalesced-secure, and per-leaf-secure exchanges return the
-    same bits, and the wire records carry the structural counts (1 vs
-    n_leaves collectives, 2 vs 2·n_leaves launches) plus the per-leaf
-    payload breakdown."""
+    """Plain (coalesced default AND per-leaf), coalesced-secure, and
+    per-leaf-secure exchanges return the same bits, and the wire records
+    carry the structural counts (1 vs n_leaves collectives, 2 vs 2·n_leaves
+    launches, zero pad bytes on the packed wire) plus the per-leaf payload
+    breakdown."""
     mesh = make_mesh((1,), ("data",))
     rng = np.random.default_rng(11)
     tree = _random_tree(rng, 1, 5)
     specs = compat.tree_map(lambda _: P("data"), tree)
 
-    def run(sec):
-        body = lambda t: keyed_all_to_all(t, "data", sec, round_index=jnp.uint32(7))
+    def run(sec, coalesce=None):
+        body = lambda t: keyed_all_to_all(t, "data", sec,
+                                          round_index=jnp.uint32(7),
+                                          coalesce=coalesce)
         fn = compat.shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs,
                               check_vma=False)
         return jax.jit(fn)(tree)
 
     with record_wire_bytes() as recs:
-        out_plain = run(None)
+        out_plain = run(None)                 # plaintext, coalesced default
+        out_plain_pl = run(None, coalesce=False)
         out_co = run(_cfg("pallas-interpret", True))
         out_pl = run(_cfg("pallas-interpret", False))
-    for a, b, c in zip(jax.tree.leaves(out_plain), jax.tree.leaves(out_co),
-                       jax.tree.leaves(out_pl)):
-        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
-                                      np.asarray(b).view(np.uint8))
-        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
-                                      np.asarray(c).view(np.uint8))
+    ref = [np.asarray(l).view(np.uint8) for l in jax.tree.leaves(out_plain)]
+    for other in (out_plain_pl, out_co, out_pl):
+        for a, b in zip(ref, jax.tree.leaves(other)):
+            np.testing.assert_array_equal(a, np.asarray(b).view(np.uint8))
 
-    plain, co, pl = recs
+    plain_co, plain_pl, co, pl = recs
     n_leaves = len(jax.tree.leaves(tree))
-    assert co["coalesced"] and not pl["coalesced"] and not plain["coalesced"]
+    assert plain_co["coalesced"] and co["coalesced"]
+    assert not plain_pl["coalesced"] and not pl["coalesced"]
+    # plaintext coalesced: same single-wire topology, no keystream
+    assert plain_co["collectives"] == 1 and plain_co["keystream_launches"] == 0
+    assert plain_pl["collectives"] == n_leaves
+    assert plain_pl["keystream_launches"] == 0
     assert co["collectives"] == 1 and co["keystream_launches"] == 2
     assert pl["collectives"] == n_leaves
     assert pl["keystream_launches"] == 2 * n_leaves
-    assert plain["collectives"] == n_leaves and plain["keystream_launches"] == 0
     # zero CTR expansion, leaf by leaf, on both secure layouts
     assert co["per_leaf"] == pl["per_leaf"]
     assert co["bytes"] == pl["bytes"] == sum(co["per_leaf"])
-    # the coalesced wire's only extra bytes are the ≤15-word/leaf block pad
-    assert co["wire_bytes"] == co["bytes"] + co["pad_bytes"]
-    assert 0 <= co["pad_bytes"] <= n_leaves * 15 * 4
-    assert pl["pad_bytes"] == 0 and pl["wire_bytes"] == pl["bytes"]
+    # the packed wire carries ZERO pad bytes — secure and plaintext alike
+    for rec in (plain_co, plain_pl, co, pl):
+        assert rec["pad_bytes"] == 0 and rec["wire_bytes"] == rec["bytes"]
 
 
 # --- structural proof: one all_to_all per secure round ------------------------
@@ -211,6 +223,26 @@ def test_jaxpr_collectives_per_secure_round(coalesce, want_a2a, want_launches):
     # the scan body traces once, so whole-program counts ARE per-round counts
     assert count_primitives(jaxpr, "all_to_all") == want_a2a
     assert count_primitives(jaxpr, "pallas_call") == want_launches
+
+
+@pytest.mark.parametrize("coalesce,want_a2a", [(True, 1), (False, 3)])
+def test_jaxpr_collectives_per_plaintext_round(coalesce, want_a2a):
+    """Plaintext (`secure=None`) rounds ride the same packed single-wire
+    topology: ONE all_to_all per round by default (per-leaf with
+    coalesce=False), and ZERO keystream launches either way — so a
+    secure-vs-plain jaxpr diff isolates the crypt, not the wire shape."""
+    from repro.core.driver import make_iterative_runner
+    from repro.core.kmeans import generate_points, make_kmeans_iterative_spec
+
+    mesh = make_mesh((1,), ("data",))
+    pts, _ = generate_points(64, 4, seed=5)
+    inputs = {"p": jnp.asarray(pts), "w": jnp.ones((64,), jnp.float32)}
+    spec = make_kmeans_iterative_spec(4, 1, n_rounds=2)
+    c0 = jnp.asarray(pts[:4])
+    runner = make_iterative_runner(spec, mesh, secure=None, coalesce=coalesce)
+    jaxpr = jax.make_jaxpr(runner.abstract_fn)(inputs, c0, jnp.uint32(0))
+    assert count_primitives(jaxpr, "all_to_all") == want_a2a
+    assert count_primitives(jaxpr, "pallas_call") == 0
 
 
 # --- selector resolution ------------------------------------------------------
