@@ -11,6 +11,8 @@
                         (collectives/launches/bytes/time per round)
   bench_sharded_state   sharded vs replicated carried state (per-device
                         state bytes + collective counts on the sort round)
+  bench_service         persistent job service: cold vs warm submit latency,
+                        runner-cache hit rate, throughput vs queue depth
   bench_roofline        §Roofline terms from the dry-run report
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -26,6 +28,22 @@ state bytes + sort-round collective counts, sharded vs replicated;
 ``bench_sharded_state``) to ``BENCH_sharded_state.json``. CI runs
 ``run.py --smoke`` (reduced sizes, driver-relevant modules only) and
 uploads the JSONs as artifacts so regressions are visible across PRs.
+
+``BENCH_service.json`` schema (``bench_service``; all latencies in seconds):
+
+  {schema, smoke, backend, platform, jax,    # shared envelope
+   service: {
+     cold:  {latency_s, runner_misses, n_iter},   # empty-cache submit
+     warm:  {latency_s, runner_misses,            # same-bucket resubmit;
+             new_compiles},                       # both must be 0
+     speedup_cold_over_warm,                      # acceptance: >= 10
+     throughput: {"<depth>": {jobs, seconds, jobs_per_s}, ...},
+     cache: {hits, misses, evictions, resident,
+             max_resident, compile_cache_size},   # RunnerCache.stats()
+     jobs_completed, round_base,                  # service counters
+     sim: {burst | straggler:                     # AdmissionSim policies
+           {bucketed_makespan_s, per_job_makespan_s,
+            bucketed_compiles, per_job_compiles, speedup}}}}
 """
 
 import argparse
@@ -45,6 +63,7 @@ from benchmarks import (
     bench_overhead,
     bench_paging,
     bench_roofline,
+    bench_service,
     bench_sharded_state,
     bench_shuffle,
     bench_tcb,
@@ -57,6 +76,7 @@ MODULES = [
     bench_iteration_time,
     bench_shuffle,
     bench_sharded_state,
+    bench_service,
     bench_paging,
     bench_overhead,
     bench_data_volume,
@@ -64,7 +84,8 @@ MODULES = [
 ]
 
 # the modules exercised by the CI smoke lane: the driver + shuffle hot paths
-SMOKE_MODULES = [bench_iteration_time, bench_shuffle, bench_sharded_state]
+SMOKE_MODULES = [bench_iteration_time, bench_shuffle, bench_sharded_state,
+                 bench_service]
 
 
 def _run_module(mod, smoke: bool):
@@ -86,6 +107,9 @@ def main(argv=None) -> None:
                     help="path for the machine-readable shuffle-wire metrics")
     ap.add_argument("--sharded-state-json-out", default="BENCH_sharded_state.json",
                     help="path for the machine-readable carried-state metrics")
+    ap.add_argument("--service-json-out", default="BENCH_service.json",
+                    help="path for the machine-readable job-service metrics "
+                         "(schema in the module docstring above)")
     args = ap.parse_args(argv)
 
     modules = SMOKE_MODULES if args.smoke else MODULES
@@ -132,6 +156,15 @@ def main(argv=None) -> None:
         with open(args.sharded_state_json_out, "w") as f:
             json.dump(state_metrics, f, indent=2, sort_keys=True)
         print(f"wrote {args.sharded_state_json_out}", file=sys.stderr)
+    # and the serving trajectory: cold/warm submit latency, runner-cache hit
+    # rate, throughput vs queue depth, admission-sim policy makespans
+    if bench_service in modules:
+        service_metrics = {k: metrics[k] for k in
+                           ("schema", "smoke", "backend", "platform", "jax")}
+        service_metrics["service"] = getattr(bench_service, "LAST_METRICS", {})
+        with open(args.service_json_out, "w") as f:
+            json.dump(service_metrics, f, indent=2, sort_keys=True)
+        print(f"wrote {args.service_json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

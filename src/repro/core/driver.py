@@ -149,6 +149,43 @@ inherit the contract by running on it.
 Workloads on the driver: `repro.core.kmeans` (paper §V), `repro.core.sort`
 (TeraSort-style sampling sort with splitter refinement), `repro.core.grep`
 (multi-round streaming grep) — all three terminate through `run_until`.
+
+Serving (multi-tenant jobs over one persistent mesh)
+----------------------------------------------------
+`repro.serve.service.SecureJobService` runs MANY concurrent jobs through
+this driver on one mesh and one `SecureShuffleConfig`. Two driver-level
+contracts make that safe and cheap:
+
+  * RUNNER-CACHE CONTRACT: `run_until(runners=...)` accepts either the
+    historical plain dict (chunk size -> runner) or ANY object exposing
+    `get_or_build(n_rounds, build_fn) -> runner` — duck-typed, so the
+    service's process-wide `RunnerCache` (keyed by workload spec identity
+    x padded input bucket x chunk size x knob tuple, with hit/miss/evict
+    counters and geometric size buckets) plugs in without this module
+    importing serve code. Whatever the container, the cached runner MUST
+    have been built from the same spec (sans n_rounds), mesh, secure
+    config (including key/nonce material — it is baked into the traced
+    program's closure), impl/coalesce knobs, and donation mode; the
+    service guarantees this by keying on all of them.
+
+  * ROUND_OFFSET DISJOINTNESS ACROSS JOBS: all jobs served under ONE
+    session key share one (key, nonce, counter) space, distinguished only
+    by the round index XORed into nonce word 1. The per-job contract above
+    (gapless executed-rounds range [round_offset, round_offset +
+    rounds_executed)) therefore extends across jobs: the service assigns
+    each admitted job a round BASE from a monotone per-service counter
+    advanced by the job's max_rounds budget, so concurrent jobs draw from
+    provably disjoint keystream ranges no matter how their chunk
+    dispatches interleave. A workload whose map_fn consumes the global
+    round index as data (streaming cursors) must carry its own cursor in
+    state instead (see `core/grep.py`) to stay offset-agnostic.
+
+`run_until_chunks` is the cooperative form of `run_until`: a generator
+that yields after every chunk dispatch, so a host scheduler can
+round-robin many jobs' dispatches on one thread (each suspended generator
+holds its own carried state, runner cache view, and round offset). The
+overflow warning is per JOB — accumulated across chunks and emitted once,
+with global round indices — rather than per dispatched chunk.
 """
 
 from __future__ import annotations
@@ -686,8 +723,9 @@ def run_until(
     loop_impl: str | None = None,
     coalesce: bool | None = None,
     donate_state: bool = True,
-    runners: dict | None = None,
+    runners=None,
     warn_on_overflow: bool = True,
+    job_tag=None,
 ) -> RunUntilResult:
     """Run a job until `spec.halt_fn` fires or `max_rounds` rounds executed.
 
@@ -717,10 +755,65 @@ def run_until(
     otherwise delete the caller's buffers on the first chunk); every
     subsequent dispatch re-uses storage with zero copies.
 
-    `runners`: optional mutable dict mapping chunk size -> runner, reused
-    across calls to amortize XLA compiles. Callers own its validity: it must
-    have been populated with the SAME spec (sans n_rounds) / mesh / secure /
-    impl / donation arguments.
+    `runners`: optional mutable runner cache reused across calls to amortize
+    XLA compiles — a plain dict mapping chunk size -> runner, or any object
+    with `get_or_build(n_rounds, build_fn) -> runner` (the serving path's
+    keyed `RunnerCache` views; module docstring: Serving). Callers own its
+    validity: it must have been populated with the SAME spec (sans
+    n_rounds) / mesh / secure / impl / donation arguments.
+
+    `job_tag`: optional job id under which the job's traced shuffles are
+    recorded (`wire_accounting.tagged`), so interleaved jobs sharing a
+    `record_wire_bytes` sink stay separable.
+    """
+    gen = run_until_chunks(
+        spec, inputs, init_state, mesh, axis_name, secure=secure,
+        max_rounds=max_rounds, round_offset=round_offset, min_chunk=min_chunk,
+        growth=growth, max_chunk=max_chunk, chacha_impl=chacha_impl,
+        loop_impl=loop_impl, coalesce=coalesce, donate_state=donate_state,
+        runners=runners, warn_on_overflow=warn_on_overflow, job_tag=job_tag)
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
+def run_until_chunks(
+    spec: IterativeSpec,
+    inputs,
+    init_state,
+    mesh: Mesh,
+    axis_name: str = "data",
+    *,
+    secure: SecureShuffleConfig | None = None,
+    max_rounds: int = 64,
+    round_offset: int = 0,
+    min_chunk: int = 1,
+    growth: int = 2,
+    max_chunk: int | None = None,
+    chacha_impl: str | None = None,
+    loop_impl: str | None = None,
+    coalesce: bool | None = None,
+    donate_state: bool = True,
+    runners=None,
+    warn_on_overflow: bool = True,
+    job_tag=None,
+):
+    """Cooperative (generator) form of `run_until` — same arguments.
+
+    Yields a progress dict after every chunk dispatch ({"chunk_rounds",
+    "rounds_executed", "n_dispatches", "halted"}) and RETURNS the final
+    `RunUntilResult` as the generator's `StopIteration.value`. A host
+    scheduler (the serving admission loop) drives many jobs' generators
+    round-robin, one chunk per turn, on a single dispatch thread; each
+    suspended generator keeps its own carried state and global round
+    offset, so interleaving any number of jobs is bit-identical to running
+    them serially.
+
+    The shuffle-overflow warning is emitted ONCE per job, after the last
+    chunk, summarizing every overflowing GLOBAL round index — not once per
+    dispatched chunk — so a long queued job cannot flood the log.
     """
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
@@ -728,6 +821,8 @@ def run_until(
         raise ValueError(f"min_chunk and growth must be >= 1, got {min_chunk}, {growth}")
     max_chunk = min(max_chunk or max_rounds, max_rounds)
     runners = {} if runners is None else runners
+    # duck-typed cache: the serving RunnerCache view, or the legacy dict
+    get_or_build = getattr(runners, "get_or_build", None)
 
     state = init_state
     if donate_state:
@@ -739,16 +834,25 @@ def run_until(
     halted = False
     aux_chunks: list = []
     dropped_chunks: list = []
+    overflow_trace_info: dict | None = None
     chunk = min(max(1, min_chunk), max_chunk)
     while executed < max_rounds and not halted:
         n = min(chunk, max_rounds - executed)
-        runner = runners.get(n)
-        if runner is None:
-            runner = runners[n] = make_iterative_runner(
+
+        def build(n=n):
+            return make_iterative_runner(
                 replace(spec, n_rounds=n), mesh, axis_name, secure,
                 chacha_impl=chacha_impl, loop_impl=loop_impl,
                 coalesce=coalesce, donate_state=donate_state)
-        out = runner(inputs, state, round_offset + executed)
+
+        if get_or_build is not None:
+            runner = get_or_build(n, build)
+        else:
+            runner = runners.get(n)
+            if runner is None:
+                runner = runners[n] = build()
+        with wire_accounting.tagged(job_tag):
+            out = runner(inputs, state, round_offset + executed)
         if spec.halt_fn is None:
             state, aux, dropped = out
             n_exec, chunk_halted = n, False
@@ -759,15 +863,22 @@ def run_until(
         dispatched += n
         aux_chunks.append(jax.tree.map(lambda a: np.asarray(a)[:n_exec], aux))
         dropped_chunks.append(np.asarray(dropped)[:n_exec])
-        if warn_on_overflow:
-            _warn_overflow(dropped_chunks[-1], round_offset + executed,
-                           runner.trace_info, stacklevel=4)
+        if warn_on_overflow and overflow_trace_info is None and np.any(
+                dropped_chunks[-1] > 0):
+            overflow_trace_info = dict(runner.trace_info)
         executed += n_exec
         halted = chunk_halted
         chunk = min(chunk * growth, max_chunk)
+        yield {"chunk_rounds": n, "rounds_executed": executed,
+               "n_dispatches": n_dispatches, "halted": halted}
 
     aux = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *aux_chunks)
     dropped = np.concatenate(dropped_chunks) if dropped_chunks else np.zeros((0,), np.int32)
+    if warn_on_overflow and overflow_trace_info is not None:
+        # ONE summary warning per job: executed rounds are gapless from
+        # round_offset, so the concatenated per-round drops carry every
+        # overflowing GLOBAL index (capacity from the chunk that overflowed)
+        _warn_overflow(dropped, round_offset, overflow_trace_info, stacklevel=4)
     return RunUntilResult(
         state=state,
         aux=aux,

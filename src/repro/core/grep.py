@@ -2,12 +2,15 @@
 
 The grep workload from the MapReduce canon: mappers scan records for the
 patterns, emit (pattern_id, 1) per hit, reducers sum per pattern. Here the
-corpus is processed as a *stream*: each shard holds n_rounds chunks, round r
-maps only chunk r (`lax.dynamic_slice` on the round index), and the running
-per-pattern hit counts are the carried state. One fused dispatch greps the
-whole corpus — the round loop never leaves the device, and in secure mode
-every round's shuffle draws a disjoint keystream via the round-index nonce
-layout in `core/shuffle.py`.
+corpus is processed as a *stream*: each shard holds n_rounds chunks, each
+executed round maps the next one (`lax.dynamic_slice` on a stream CURSOR
+carried in state — NOT on the global round index, which is shifted by
+`round_offset` for jobs admitted into a shared serving session; see the
+driver's Serving section), and the running per-pattern hit counts ride in
+the same carried state. One fused dispatch greps the whole corpus — the
+round loop never leaves the device, and in secure mode every round's
+shuffle draws a disjoint keystream via the round-index nonce layout in
+`core/shuffle.py`.
 
 Patterns are token ids over a fixed vocabulary (the same modeling of "words"
 as `core/wordcount.py`); a hit is an exact token match.
@@ -27,18 +30,30 @@ from repro.core.shuffle import SecureShuffleConfig
 
 def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
                    max_matches: int | None = None) -> IterativeSpec:
-    """Driver spec: state = running (n_patterns,) hit counts (replicated).
+    """Driver spec: state = {"hits": running (n_patterns,) counts,
+    "cursor": () u32 stream position} — both replicated.
+
+    The cursor, not the global round index, selects the next chunk of the
+    per-shard stream: it advances by one per EXECUTED round (halted rounds
+    advance neither the cursor nor the keystream), which makes the spec
+    offset-agnostic — a serving session can hand the job any
+    `round_offset` base for keystream disjointness without the stream
+    skipping ahead.
 
     `max_matches` installs a `grep -m`-style halt: stop streaming once the
     TOTAL hit count (summed over patterns) reaches the limit. The running
     counts are replicated state (reduce ends in a psum), so the halt
     decision satisfies the driver's replicated-halt contract.
+
+    Pattern-matching treats tokens < 0 as padding (they match no pattern
+    and never enter the shuffle), so inputs padded up to a serving bucket
+    with -1 tokens count identically to the unpadded stream.
     """
     patterns = jnp.asarray(patterns, jnp.int32)
     n_pat = patterns.shape[0]
 
     def map_fn(state, inputs, r):
-        start = (r.astype(jnp.int32) * chunk,)
+        start = (state["cursor"].astype(jnp.int32) * chunk,)
         toks = lax.dynamic_slice(inputs["t"], start, (chunk,))
         # pattern id per token, -1 (engine padding) where nothing matches
         eq = toks[:, None] == patterns[None, :]
@@ -50,7 +65,8 @@ def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
         hits = jax.ops.segment_sum(jnp.where(valid, rv["one"], 0.0), seg,
                                    num_segments=n_pat)
         hits = lax.psum(hits, axis_name)
-        new_state = state + hits
+        new_state = {"hits": state["hits"] + hits,
+                     "cursor": state["cursor"] + jnp.uint32(1)}
         return new_state, {"round_hits": hits}
 
     halt_fn = None
@@ -58,7 +74,7 @@ def make_grep_spec(patterns, chunk: int, *, axis_name: str = "data",
         limit = jnp.float32(max_matches)
 
         def halt_fn(state, aux, r):
-            return jnp.sum(state) >= limit
+            return jnp.sum(state["hits"]) >= limit
 
     return IterativeSpec(
         map_fn=map_fn,
@@ -88,10 +104,11 @@ def grep_count(
     """Count occurrences of each pattern token in `tokens` (int32, sharded).
 
     The per-shard stream is split into `n_rounds` chunks processed by
-    successive fused rounds (the round index doubles as the stream cursor,
-    so this job always starts at round_offset 0 — and the convergence-aware
-    driver resumes exactly where the stream stopped, because halted rounds
-    advance neither the cursor nor the keystream). Returns
+    successive fused rounds (the stream cursor is carried in state and
+    advances per EXECUTED round, so the job is round_offset-agnostic — and
+    the convergence-aware driver resumes exactly where the stream stopped,
+    because halted rounds advance neither the cursor nor the keystream).
+    Returns
     (counts (n_patterns,), per_round_hits (rounds_executed, n_patterns),
     dropped (rounds_executed,)).
 
@@ -114,7 +131,8 @@ def grep_count(
     patterns = jnp.asarray(patterns, jnp.int32)
     spec = make_grep_spec(patterns, chunk, axis_name=axis_name,
                           max_matches=max_matches)
-    init = jnp.zeros((patterns.shape[0],), jnp.float32)
+    init = {"hits": jnp.zeros((patterns.shape[0],), jnp.float32),
+            "cursor": jnp.uint32(0)}
     # no limit -> one fused dispatch of the whole stream (min_chunk covers
     # every round); with a limit, start small and grow geometrically
     min_chunk = n_rounds if max_matches is None else 1
@@ -123,4 +141,4 @@ def grep_count(
         max_rounds=n_rounds, min_chunk=min_chunk,
         chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
     )
-    return res.state, res.aux["round_hits"], res.dropped
+    return res.state["hits"], res.aux["round_hits"], res.dropped

@@ -129,7 +129,8 @@ def make_kmeans_step(mesh: Mesh, axis_name: str = "data", secure: SecureShuffleC
 
 def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
                                n_rounds: int = 1, axis_name: str = "data",
-                               threshold: float | None = None) -> IterativeSpec:
+                               threshold: float | None = None,
+                               runtime_threshold: bool = False) -> IterativeSpec:
     """The same per-round math as `make_kmeans_step`, as a driver spec.
 
     Carried state = the (k, d) center table (replicated); aux per round =
@@ -142,7 +143,39 @@ def make_kmeans_iterative_spec(k: int, n_shards: int, *, impl: str = "jnp",
     comparison is done in float32, matching the dtype of the on-device
     shift, so host-side reference loops must compare in float32 too to stop
     at the identical round.
+
+    `runtime_threshold=True` is the SERVING variant: the paper's threshold
+    is data-dependent (diag/1000 of the job's bounding box), so baking it
+    into the traced program would force a recompile per job. Instead the
+    carried state becomes {"c": centers, "thr": () f32} and the halt
+    predicate reads `state["thr"]` at run time — one compiled runner then
+    serves any threshold. `threshold` is ignored in this mode; weight-0
+    points contribute nothing to sums/counts, so inputs padded with
+    zero-weight rows up to a serving bucket fit the same program.
     """
+    if runtime_threshold:
+        def map_fn(state, inputs, r):
+            return _assign_partials(inputs["p"], inputs["w"], state["c"], impl)
+
+        def reduce_fn(state, rk, rv, valid, r):
+            new_centers, shift = _reduce_centers(
+                state["c"], rk, rv, valid, axis_name=axis_name, n_shards=n_shards
+            )
+            new_state = {"c": new_centers, "thr": state["thr"]}
+            return new_state, {"centers": new_centers, "shift": shift}
+
+        def halt_fn(state, aux, r):
+            return aux["shift"] < state["thr"]
+
+        return IterativeSpec(
+            map_fn=map_fn,
+            reduce_fn=reduce_fn,
+            hash_fn=identity_hash,
+            capacity=-(-k // n_shards),
+            n_rounds=n_rounds,
+            halt_fn=halt_fn,
+            state_specs=P(),
+        )
 
     def map_fn(centers, inputs, r):
         return _assign_partials(inputs["p"], inputs["w"], centers, impl)
@@ -182,6 +215,11 @@ class KMeansRunnerCache:
     jitted runners that `run_until` populates lazily; pass as `kmeans_fit`'s
     `runner=` to amortize the (expensive, secure-mode) XLA compiles across
     many fits with the same k/mesh/secure/impl/threshold.
+
+    `runners` is a plain per-cache dict by default; `make_kmeans_runner`'s
+    `cache=` hook replaces it with a keyed view of the process-wide serving
+    `repro.serve.service.RunnerCache` (same duck-typed contract `run_until`
+    accepts), so ad-hoc fits and the job service share one compile cache.
     """
 
     spec: IterativeSpec
@@ -194,7 +232,7 @@ class KMeansRunnerCache:
     threshold: float | None
     min_chunk: int = 1
     coalesce: bool | None = None
-    runners: dict = field(default_factory=dict)
+    runners: object = field(default_factory=dict)
 
 
 def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
@@ -202,7 +240,8 @@ def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
                        rounds_per_dispatch: int = 8, threshold: float | None = None,
                        min_chunk: int = 1, chacha_impl: str | None = None,
                        loop_impl: str | None = None,
-                       coalesce: bool | None = None) -> KMeansRunnerCache:
+                       coalesce: bool | None = None,
+                       cache=None) -> KMeansRunnerCache:
     """Prebuild the convergence-aware runner cache for `kmeans_fit`.
 
     `threshold` bakes the paper's §V stopping rule into the on-device
@@ -214,15 +253,29 @@ def make_kmeans_runner(mesh: Mesh, k: int, *, axis_name: str = "data",
     no-op rounds when convergence is very fast). `chacha_impl` selects the
     secure keystream backend and `coalesce` the secure wire layout (see
     `core/shuffle.py`); `loop_impl` the halt-loop shape (`core/driver.py`).
+
+    `cache` (a `repro.serve.service.RunnerCache`) backs the per-chunk-size
+    runners with the process-wide keyed serving cache instead of a private
+    dict: fits keyed by (k, mesh, secure material, impl knobs, threshold)
+    then share compiled programs with the job service and each other, and
+    the cache's hit/miss/evict counters see them.
     """
     spec = make_kmeans_iterative_spec(k, mesh.shape[axis_name], impl=impl,
                                       axis_name=axis_name, threshold=threshold)
-    return KMeansRunnerCache(
+    runner_cache = KMeansRunnerCache(
         spec=spec, mesh=mesh, axis_name=axis_name, secure=secure,
         chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
         max_chunk=max(1, rounds_per_dispatch), threshold=threshold,
         min_chunk=max(1, min_chunk),
     )
+    if cache is not None:
+        runner_cache.runners = cache.view(
+            spec_id=("kmeans-fit", k, mesh.shape[axis_name], axis_name, impl,
+                     float(threshold) if threshold is not None else None),
+            mesh=mesh, axis_name=axis_name, secure=secure,
+            chacha_impl=chacha_impl, loop_impl=loop_impl, coalesce=coalesce,
+        )
+    return runner_cache
 
 
 def kmeans_fit(

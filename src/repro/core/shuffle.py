@@ -509,17 +509,34 @@ def _crypt_wire_coalesced(wire, layout: _WireLayout, cfg, nonce_ids, ctr_rows,
 
 
 class _WireAccounting:
-    """Trace-time shuffle byte counter (see `record_wire_bytes`)."""
+    """Trace-time shuffle byte counter (see `record_wire_bytes`).
+
+    Re-entrant by construction: active `record_wire_bytes` contexts form a
+    STACK of independent record sinks (every traced shuffle appends to all
+    of them), suppression is a nesting counter, and the job attribution of
+    a record comes from the innermost `tagged(job_id)` context — so two
+    interleaved `run_until` jobs (the serving path: chunk dispatches of
+    concurrent jobs alternate on one host thread, each holding its own
+    open recording context across its generator's suspensions) neither
+    clobber each other's record lists nor mis-attribute records. Sinks are
+    removed by IDENTITY on context exit, so out-of-LIFO-order exits — the
+    norm for generator-held contexts — are safe.
+    """
 
     def __init__(self):
-        self.enabled = False
-        self.records: list[dict] = []
+        self._sinks: list[list] = []
+        self._tags: list = []
+        self._suppress = 0
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self._sinks) and self._suppress == 0
 
     def note(self, *, secure: bool, nbytes: int, n_leaves: int, halted: bool = False,
              coalesced: bool = False, pad_bytes: int = 0,
              per_leaf: list | None = None, collectives: int = 0,
              keystream_launches: int = 0):
-        """Append one record per traced `keyed_all_to_all`.
+        """Append one record per traced `keyed_all_to_all` to every sink.
 
         bytes:              payload bytes — raw leaf bytes in plaintext
                             mode, packed u32 payload words in secure mode;
@@ -534,14 +551,19 @@ class _WireAccounting:
         collectives:        all_to_all ops this shuffle traces per round.
         keystream_launches: keystream derivations (encrypt + decrypt) this
                             shuffle traces per round; 0 in plaintext mode.
+        job:                innermost `tagged` job id, or None — lets a
+                            shared sink split interleaved jobs' records.
         """
-        if self.enabled:
-            self.records.append(
-                {"secure": secure, "bytes": nbytes, "leaves": n_leaves,
-                 "halted": halted, "coalesced": coalesced,
-                 "wire_bytes": nbytes + pad_bytes, "pad_bytes": pad_bytes,
-                 "per_leaf": list(per_leaf or []), "collectives": collectives,
-                 "keystream_launches": keystream_launches})
+        if not self.enabled:
+            return
+        rec = {"secure": secure, "bytes": nbytes, "leaves": n_leaves,
+               "halted": halted, "coalesced": coalesced,
+               "wire_bytes": nbytes + pad_bytes, "pad_bytes": pad_bytes,
+               "per_leaf": list(per_leaf or []), "collectives": collectives,
+               "keystream_launches": keystream_launches,
+               "job": self._tags[-1] if self._tags else None}
+        for sink in self._sinks:
+            sink.append(dict(rec))
 
     def note_halted_round(self, secure: bool = True):
         """Record the halted-round passthrough: ZERO bytes cross the wire.
@@ -555,14 +577,32 @@ class _WireAccounting:
 
     @contextmanager
     def suppressed(self):
-        """Context: disable THIS recorder (abstract eval_shape passes would
-        otherwise double-count a shuffle the driver only traces for shapes)."""
-        prev = self.enabled
-        self.enabled = False
+        """Context: disable recording (abstract eval_shape passes would
+        otherwise double-count a shuffle the driver only traces for shapes).
+        Nestable — a counter, not a flag, so an inner suppression cannot
+        un-suppress an outer one."""
+        self._suppress += 1
         try:
             yield
         finally:
-            self.enabled = prev
+            self._suppress -= 1
+
+    @contextmanager
+    def tagged(self, job_id):
+        """Context: attribute records traced inside to `job_id`.
+
+        The driver wraps each chunk dispatch of a tagged job in this, so a
+        sink shared by interleaved jobs can be split by the records' "job"
+        field. None is a no-op (records keep the enclosing tag, if any).
+        """
+        if job_id is None:
+            yield
+            return
+        self._tags.append(job_id)
+        try:
+            yield
+        finally:
+            self._tags.remove(job_id)
 
 
 wire_accounting = _WireAccounting()
@@ -578,15 +618,31 @@ class record_wire_bytes:
     `lax.scan` (the iterative driver) traces once and records ONE round's
     bytes. Used by `benchmarks/bench_data_volume.py` to prove CTR ciphertext
     expansion is zero.
+
+    RE-ENTRANT: contexts nest (each gets its own record list; a shuffle
+    traced under several open contexts lands in all of them) and may exit
+    in any order — each `__exit__` removes only its own sink — so
+    interleaved `run_until` jobs that each hold a context open across
+    host-dispatch turns cannot corrupt one another's accounting. Records
+    carry a "job" field from the innermost `wire_accounting.tagged(job_id)`
+    context (None untagged) to split a shared sink by job.
     """
 
+    def __init__(self):
+        self.records: list[dict] = []
+
     def __enter__(self):
-        wire_accounting.enabled = True
-        wire_accounting.records = []
-        return wire_accounting.records
+        self.records = []
+        wire_accounting._sinks.append(self.records)
+        return self.records
 
     def __exit__(self, *exc):
-        wire_accounting.enabled = False
+        # remove by IDENTITY, wherever it sits: interleaved contexts exit
+        # out of stack order
+        for i, sink in enumerate(wire_accounting._sinks):
+            if sink is self.records:
+                del wire_accounting._sinks[i]
+                break
         return False
 
 

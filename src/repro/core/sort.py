@@ -64,7 +64,8 @@ def equidepth_edges(edges, counts):
 def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "data",
                           n_rounds: int = 2, halt_total: int | None = None,
                           balance: float = 1.5,
-                          shard_state: str | bool = "auto") -> IterativeSpec:
+                          shard_state: str | bool = "auto",
+                          dynamic_total: bool = False) -> IterativeSpec:
     """Driver spec for sampling sort over `n_shards` reducers.
 
     State: {"edges": (R+1,) f32 range-partition edges (replicated),
@@ -89,6 +90,15 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
     times the fair share. Both terms are functions of the round's
     replicated `counts` aux, satisfying the driver's replicated-halt
     contract in either state layout.
+
+    `dynamic_total=True` is the SERVING variant: the record total moves
+    from a baked trace-time constant into a replicated "total" state leaf
+    (read by the halt predicate at run time), and the map marks NON-FINITE
+    records invalid so they never enter the shuffle or the counts. One
+    compiled runner then serves any job padded (with +inf) up to the same
+    bucket shape — different real sizes reuse the program instead of
+    recompiling — and `state["total"]` carries each job's real count.
+    `halt_total` is ignored in this mode; `balance` stays baked.
     """
     if isinstance(shard_state, bool):
         sharded = shard_state
@@ -101,6 +111,10 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
         bucket = jnp.clip(
             jnp.searchsorted(state["edges"][1:-1], v, side="right"), 0, n_shards - 1
         ).astype(jnp.int32)
+        if dynamic_total:
+            # bucket-padding records (+inf) are invalid: bucket_pack drops
+            # keys < 0 without counting them, so padding is never shuffled
+            bucket = jnp.where(jnp.isfinite(v), bucket, jnp.int32(-1))
         return bucket, {"v": v}
 
     def reduce_fn(state, rk, rv, valid, r):
@@ -122,10 +136,20 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
             "sorted": table,
             "counts": counts,
         }
+        if dynamic_total:
+            new_state["total"] = state["total"]
         return new_state, {"counts": counts}
 
     halt_fn = None
-    if halt_total is not None:
+    if dynamic_total:
+        bal = jnp.float32(balance)
+
+        def halt_fn(state, aux, r):
+            counts = aux["counts"]
+            total = state["total"]
+            fair = bal * total / jnp.float32(n_shards)
+            return (jnp.sum(counts) >= total) & (jnp.max(counts) <= fair)
+    elif halt_total is not None:
         fair = jnp.float32(balance * halt_total / n_shards)
         total = jnp.float32(halt_total)
 
@@ -133,6 +157,13 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
             counts = aux["counts"]
             return (jnp.sum(counts) >= total) & (jnp.max(counts) <= fair)
 
+    state_specs = {
+        "edges": P(),
+        "sorted": P(axis_name) if sharded else P(),
+        "counts": P(),
+    }
+    if dynamic_total:
+        state_specs["total"] = P()
     return IterativeSpec(
         map_fn=map_fn,
         reduce_fn=reduce_fn,
@@ -140,11 +171,7 @@ def make_sample_sort_spec(n_shards: int, capacity: int, *, axis_name: str = "dat
         capacity=capacity,
         n_rounds=n_rounds,
         halt_fn=halt_fn,
-        state_specs={
-            "edges": P(),
-            "sorted": P(axis_name) if sharded else P(),
-            "counts": P(),
-        },
+        state_specs=state_specs,
     )
 
 

@@ -181,7 +181,30 @@ def main():
     ap.add_argument("--report", default=REPORT)
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--bucket-growth", default=None,
+                    help="serving size-bucket growth factor (a number > 1); "
+                         "exported as $REPRO_BUCKET_GROWTH so every serving "
+                         "path this run touches inherits it")
+    ap.add_argument("--max-resident-runners", default=None,
+                    help="serving runner-cache residency cap (int >= 1, or "
+                         "'none' for unbounded); exported as "
+                         "$REPRO_SERVICE_MAX_RUNNERS")
     args = ap.parse_args()
+
+    # validate through the serving resolvers AFTER exporting, so a bad value
+    # fails fast with the error that names the env var (the same contract as
+    # $REPRO_CHACHA_IMPL via resolve_chacha_impl) rather than deep inside a
+    # service constructed much later
+    from repro.serve.service import (
+        BUCKET_GROWTH_ENV, MAX_RUNNERS_ENV,
+        resolve_bucket_growth, resolve_max_resident,
+    )
+    if args.bucket_growth is not None:
+        os.environ[BUCKET_GROWTH_ENV] = str(args.bucket_growth)
+        resolve_bucket_growth("auto")
+    if args.max_resident_runners is not None:
+        os.environ[MAX_RUNNERS_ENV] = str(args.max_resident_runners)
+        resolve_max_resident("auto")
 
     os.makedirs(os.path.dirname(os.path.abspath(args.report)), exist_ok=True)
     results = {}

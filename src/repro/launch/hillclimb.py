@@ -6,14 +6,21 @@ os.environ["XLA_FLAGS"] = (
 
 """§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
 
-Three cells (chosen per EXPERIMENTS.md §Perf):
+Four cells (chosen per EXPERIMENTS.md §Perf):
   A  rwkv6-1.6b|train_4k        worst non-decode roofline fraction (memory)
   B  qwen2-moe-a2.7b|decode_32k most collective-bound dominant-term cell
   C  granite-moe-3b-a800m|train_4k  the paper's technique (secure shuffle)
+  S  serving admission knobs    bucket growth x resident-runner cap, swept
+                                through the virtual-time AdmissionSim
+                                (runtime/sim.py) on burst + straggler traces
+                                — no device, makespans only
 
-Each variant is a config override; results append to reports/perf.json.
+A/B/C variants are config overrides re-lowered via dryrun's run_cell; S
+variants are ($REPRO_BUCKET_GROWTH, $REPRO_SERVICE_MAX_RUNNERS) settings
+validated through the serving resolvers (errors name the env var, like
+resolve_chacha_impl). Results append to reports/perf.json.
 
-Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C] [--mesh single_pod]
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|S] [--mesh single_pod]
 """
 
 import argparse
@@ -65,18 +72,81 @@ CELLS = {
 
 REPORT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "perf.json")
 
+# Serving-knob sweep (cell S): each variant is a (bucket growth, resident
+# runner cap) point, the two knobs the job service exposes via
+# $REPRO_BUCKET_GROWTH / $REPRO_SERVICE_MAX_RUNNERS.
+SERVICE_VARIANTS = [
+    ("v0_g2_unbounded", {"bucket_growth": 2.0, "max_resident": None}),
+    ("v1_g1.5_unbounded", {"bucket_growth": 1.5, "max_resident": None}),
+    ("v2_g4_unbounded", {"bucket_growth": 4.0, "max_resident": None}),
+    ("v3_g2_rmax8", {"bucket_growth": 2.0, "max_resident": 8}),
+    ("v4_g2_rmax2", {"bucket_growth": 2.0, "max_resident": 2}),
+]
+
+
+def run_service_cell(bucket_growth, max_resident):
+    """Sweep point for cell S: AdmissionSim makespans under the two knobs.
+
+    Values go through the serving resolvers first, so an invalid setting
+    fails with the error that names the env var (resolve_chacha_impl-style)
+    instead of a bare number error deep in the sim.
+    """
+    from repro.runtime.sim import AdmissionSim, burst_trace, straggler_trace
+    from repro.serve.service import resolve_bucket_growth, resolve_max_resident
+
+    growth = resolve_bucket_growth(bucket_growth)
+    cap = resolve_max_resident(max_resident if max_resident is None else int(max_resident))
+    sim = AdmissionSim(bucket_growth=growth, max_resident=cap)
+    out = {"status": "OK", "bucket_growth": growth, "max_resident": cap,
+           "traces": {}}
+    for name, trace in [("burst", burst_trace()), ("straggler", straggler_trace())]:
+        bucketed = sim.run(trace, "bucketed")
+        per_job = sim.run(trace, "compile-per-job")
+        out["traces"][name] = {
+            "bucketed_makespan_s": bucketed["makespan_s"],
+            "per_job_makespan_s": per_job["makespan_s"],
+            "compiles": bucketed["compiles"],
+            "evictions": bucketed["evictions"],
+            "mean_latency_s": bucketed["mean_latency_s"],
+        }
+    return out
+
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C"])
+    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C", "S"])
     ap.add_argument("--mesh", default="single_pod")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
+    os.makedirs(os.path.dirname(os.path.abspath(REPORT)), exist_ok=True)
     results = {}
     if os.path.exists(REPORT):
         with open(REPORT) as f:
             results = json.load(f)
+
+    if args.cell in (None, "S"):
+        for vname, knobs in SERVICE_VARIANTS:
+            key = f"S|service|sim|{vname}"
+            if key in results and not args.force:
+                print(f"[cached] {key}")
+                continue
+            print(f"[run] {key}", flush=True)
+            try:
+                r = run_service_cell(**knobs)
+                r["variant"] = vname
+            except Exception as e:
+                r = {"status": "FAIL", "error": str(e)}
+            results[key] = r
+            with open(REPORT, "w") as f:
+                json.dump(results, f, indent=1)
+            if r["status"] == "OK":
+                burst = r["traces"]["burst"]
+                print(f"   burst bucketed={burst['bucketed_makespan_s']:.0f}s "
+                      f"per-job={burst['per_job_makespan_s']:.0f}s "
+                      f"compiles={burst['compiles']} evict={burst['evictions']}")
+            else:
+                print(f"   FAIL {r['error'][:160]}")
 
     for cell_id, cell in CELLS.items():
         if args.cell and cell_id != args.cell:

@@ -1,3 +1,24 @@
 from repro.serve.engine import cache_specs, decode_step, init_cache, prefill
+from repro.serve.service import (
+    JobHandle,
+    RunnerCache,
+    SecureJobService,
+    bucket_for,
+    default_runner_cache,
+    resolve_bucket_growth,
+    resolve_max_resident,
+)
 
-__all__ = ["init_cache", "cache_specs", "prefill", "decode_step"]
+__all__ = [
+    "init_cache",
+    "cache_specs",
+    "prefill",
+    "decode_step",
+    "JobHandle",
+    "RunnerCache",
+    "SecureJobService",
+    "bucket_for",
+    "default_runner_cache",
+    "resolve_bucket_growth",
+    "resolve_max_resident",
+]

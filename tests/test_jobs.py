@@ -1,0 +1,132 @@
+"""Tests for the canonical runtime jobs (`repro.runtime.jobs`).
+
+Covers the paper's two reference workloads end to end through the simulated
+cluster — word count (Listings 1-2) and iterated k-means (§V) — plus
+`make_cluster` wiring: determinism across runs (the simulator is
+virtual-time, so two identical runs must agree bit-for-bit) and result
+correctness against plain-host oracles.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from repro.runtime.jobs import make_cluster, run_kmeans, run_wordcount
+from repro.runtime.sim import TimingModel
+
+LINES = [
+    "the quick brown fox",
+    "the lazy dog",
+    "the quick dog jumps",
+    "brown dog brown fox",
+]
+
+
+def _expected_counts(lines):
+    return dict(Counter(w for line in lines for w in line.split()))
+
+
+def test_make_cluster_wiring():
+    cluster, client, workers = make_cluster(3)
+    assert len(workers) == 3
+    assert [w.name for w in workers] == ["w0", "w1", "w2"]
+    # all entities registered under the one router/cluster
+    for w in workers:
+        assert cluster.entities[w.name] is w
+    assert cluster.entities["client"] is client
+
+
+def test_wordcount_correctness():
+    cluster, client, _ = make_cluster(4)
+    pairs, completed = run_wordcount(cluster, client, LINES,
+                                     n_mappers=2, n_reducers=2)
+    assert pairs == _expected_counts(LINES)
+    assert completed["elapsed"] > 0.0
+
+
+def test_wordcount_deterministic():
+    outs = []
+    for _ in range(2):
+        cluster, client, _ = make_cluster(4)
+        pairs, completed = run_wordcount(cluster, client, LINES,
+                                         n_mappers=2, n_reducers=2)
+        outs.append((pairs, completed["elapsed"], cluster.now,
+                     cluster.delivered_messages))
+    # virtual time: identical runs agree exactly, including timings
+    assert outs[0] == outs[1]
+
+
+def test_wordcount_mapper_split_invariant():
+    base_cluster, base_client, _ = make_cluster(4)
+    base, _ = run_wordcount(base_cluster, base_client, LINES,
+                            n_mappers=1, n_reducers=1)
+    for n_mappers, n_reducers in [(2, 2), (4, 3)]:
+        cluster, client, _ = make_cluster(n_mappers + n_reducers)
+        pairs, _ = run_wordcount(cluster, client, LINES,
+                                 n_mappers=n_mappers, n_reducers=n_reducers)
+        assert pairs == base
+
+
+def _points(n=60, k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.1, 0.9, size=(k, 2))
+    pts = centers[rng.integers(0, k, size=n)] + rng.normal(scale=0.02, size=(n, 2))
+    return pts.astype(np.float32)
+
+
+def _kmeans_ref(points, k, max_iter, threshold):
+    """Plain-host oracle for the jobs' Lua-analogue k-means math."""
+    centers = np.asarray(points[:k], np.float64)
+    for _ in range(max_iter):
+        d2 = ((points[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        assign = d2.argmin(axis=1)
+        new = centers.copy()
+        for i in range(k):
+            mask = assign == i
+            if mask.any():
+                new[i] = points[mask].mean(axis=0)
+        shift = float(np.mean(np.linalg.norm(new - centers, axis=1)))
+        centers = new
+        if shift < threshold:
+            break
+    return centers.astype(np.float32)
+
+
+def test_kmeans_converges_to_reference():
+    pts = _points()
+    cluster, client, _ = make_cluster(4)
+    centers, history = run_kmeans(cluster, client, pts, 3,
+                                  n_mappers=2, n_reducers=2, max_iter=20)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    threshold = float(np.linalg.norm(hi - lo)) / 1000.0
+    ref = _kmeans_ref(pts, 3, 20, threshold)
+    assert history, "no iterations recorded"
+    assert history[-1]["shift"] < threshold  # paper §V stop rule fired
+    # same assignment-loop math as the Lua analogue, so centers land together
+    assert np.allclose(np.sort(centers, axis=0), np.sort(ref, axis=0), atol=1e-3)
+
+
+def test_kmeans_deterministic():
+    pts = _points(seed=3)
+    runs = []
+    for _ in range(2):
+        cluster, client, _ = make_cluster(4)
+        centers, history = run_kmeans(cluster, client, pts, 3,
+                                      n_mappers=2, n_reducers=2, max_iter=15)
+        runs.append((centers.tobytes(), [h["shift"] for h in history],
+                     [h["elapsed"] for h in history]))
+    assert runs[0] == runs[1]
+
+
+def test_timing_model_scales_elapsed():
+    slow = TimingModel(net_bw_bytes_s=1.0e6, net_latency_s=5e-3)
+    fast = TimingModel()
+    elapsed = {}
+    for name, timing in [("slow", slow), ("fast", fast)]:
+        cluster, client, _ = make_cluster(4, timing=timing)
+        _, completed = run_wordcount(cluster, client, LINES,
+                                     n_mappers=2, n_reducers=2)
+        elapsed[name] = completed["elapsed"]
+    assert elapsed["slow"] > elapsed["fast"]

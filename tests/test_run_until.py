@@ -298,6 +298,35 @@ def test_overflow_warning_global_index_in_later_multiround_chunk():
     assert "round 3" not in msgs[0]
 
 
+def test_overflow_one_summary_across_multiple_overflowing_chunks():
+    """A job that overflows in TWO different chunks still emits exactly ONE
+    summary warning, naming both global round indices — the per-job dedupe
+    of `run_until_chunks` (a queued serving job must not flood the log with
+    one warning per dispatched chunk). min_chunk=2 + growth=1 splits 4
+    rounds into chunks [0,1] and [2,3]; rounds 1 and 3 each overflow."""
+
+    def map_fn(state, inputs, r):
+        ks = jnp.arange(6, dtype=jnp.int32)
+        overflowing = (r == 1) | (r == 3)
+        keys = jnp.where(overflowing, jnp.zeros_like(ks),
+                         jnp.where(ks < 2, 0, -1))
+        return keys, {"v": jnp.ones((6,), jnp.float32)}
+
+    def reduce_fn(state, rk, rv, valid, r):
+        return state, {"r": r}
+
+    spec = IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, hash_fn=identity_hash,
+                         capacity=2, n_rounds=1)
+    with pytest.warns(RuntimeWarning) as recs:
+        run_until(spec, {"x": jnp.zeros((6,), jnp.float32)}, jnp.float32(0.0),
+                  _mesh1(), max_rounds=4, min_chunk=2, growth=1)
+    msgs = [str(w.message) for w in recs
+            if "shuffle overflow" in str(w.message)]
+    assert len(msgs) == 1, msgs
+    assert "round 1: n_dropped=4" in msgs[0]
+    assert "round 3: n_dropped=4" in msgs[0]
+
+
 # --- workloads through run_until ---------------------------------------------
 
 
