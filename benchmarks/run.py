@@ -13,6 +13,9 @@
                         state bytes + collective counts on the sort round)
   bench_service         persistent job service: cold vs warm submit latency,
                         runner-cache hit rate, throughput vs queue depth
+  bench_costmodel       calibrated cost model vs reality: per-workload
+                        steady-state prediction error, sim consistency,
+                        auto vs default knob vectors
   bench_roofline        §Roofline terms from the dry-run report
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -25,9 +28,13 @@ secure-shuffle wire metrics (collectives + keystream launches per round,
 bytes, coalesced vs per-leaf steady state; ``bench_shuffle``) additionally
 to ``BENCH_shuffle.json``, and the carried-state layout metrics (per-device
 state bytes + sort-round collective counts, sharded vs replicated;
-``bench_sharded_state``) to ``BENCH_sharded_state.json``. CI runs
-``run.py --smoke`` (reduced sizes, driver-relevant modules only) and
-uploads the JSONs as artifacts so regressions are visible across PRs.
+``bench_sharded_state``) to ``BENCH_sharded_state.json``, and the
+calibrated cost-model prediction errors (``bench_costmodel``) to
+``BENCH_costmodel.json``. Every artifact's full field-by-field schema is
+documented in ``benchmarks/README.md``. CI runs ``run.py --smoke``
+(reduced sizes, driver-relevant modules only) and uploads the JSONs as
+artifacts so regressions are visible across PRs; the smoke lane fails if
+any cost-model ``pred_error`` cell exceeds 50%.
 
 ``BENCH_service.json`` schema (``bench_service``; all latencies in seconds):
 
@@ -57,6 +64,7 @@ import jax
 
 from benchmarks import (
     bench_convergence,
+    bench_costmodel,
     bench_crypto,
     bench_data_volume,
     bench_iteration_time,
@@ -77,6 +85,7 @@ MODULES = [
     bench_shuffle,
     bench_sharded_state,
     bench_service,
+    bench_costmodel,
     bench_paging,
     bench_overhead,
     bench_data_volume,
@@ -85,7 +94,29 @@ MODULES = [
 
 # the modules exercised by the CI smoke lane: the driver + shuffle hot paths
 SMOKE_MODULES = [bench_iteration_time, bench_shuffle, bench_sharded_state,
-                 bench_service]
+                 bench_service, bench_costmodel]
+
+# envelope keys shared by every BENCH_*.json artifact
+ENVELOPE = ("schema", "smoke", "backend", "platform", "jax")
+
+
+def _warn_stale_sections(path: str, owned: set) -> None:
+    """Warn when an existing artifact holds sections this run won't rewrite.
+
+    Checked-in BENCH_*.json files outlive module renames; a section nobody
+    owns any more (e.g. a leftover ``bench_oblivious``) would silently pin
+    numbers from an old HEAD forever. The rewrite below drops it — this
+    warning makes the drop visible in the CI log.
+    """
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except (OSError, ValueError):
+        return
+    for key in old:
+        if key not in owned and key not in ENVELOPE:
+            print(f"WARNING: {path} section {key!r} is not produced by any "
+                  f"current benchmark module; dropping it", file=sys.stderr)
 
 
 def _run_module(mod, smoke: bool):
@@ -110,6 +141,9 @@ def main(argv=None) -> None:
     ap.add_argument("--service-json-out", default="BENCH_service.json",
                     help="path for the machine-readable job-service metrics "
                          "(schema in the module docstring above)")
+    ap.add_argument("--costmodel-json-out", default="BENCH_costmodel.json",
+                    help="path for the calibrated cost-model prediction-error "
+                         "metrics (schema in benchmarks/README.md)")
     args = ap.parse_args(argv)
 
     modules = SMOKE_MODULES if args.smoke else MODULES
@@ -133,6 +167,9 @@ def main(argv=None) -> None:
         mod_metrics = getattr(mod, "LAST_METRICS", None)
         if mod_metrics:
             metrics[mod.__name__.removeprefix("benchmarks.")] = mod_metrics
+    _warn_stale_sections(
+        args.json_out,
+        {m.__name__.removeprefix("benchmarks.") for m in MODULES})
     with open(args.json_out, "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
     print(f"wrote {args.json_out}", file=sys.stderr)
@@ -140,8 +177,7 @@ def main(argv=None) -> None:
     # numbers (collectives + keystream launches per secure round, bytes,
     # coalesced vs per-leaf timing) live here
     if bench_shuffle in modules:
-        shuffle_metrics = {k: metrics[k] for k in
-                           ("schema", "smoke", "backend", "platform", "jax")}
+        shuffle_metrics = {k: metrics[k] for k in ENVELOPE}
         shuffle_metrics["shuffle"] = getattr(bench_shuffle, "LAST_METRICS", {})
         with open(args.shuffle_json_out, "w") as f:
             json.dump(shuffle_metrics, f, indent=2, sort_keys=True)
@@ -149,8 +185,7 @@ def main(argv=None) -> None:
     # likewise for the carried-state layout trajectory: per-device state
     # bytes and sort-round collective counts, sharded vs replicated
     if bench_sharded_state in modules:
-        state_metrics = {k: metrics[k] for k in
-                         ("schema", "smoke", "backend", "platform", "jax")}
+        state_metrics = {k: metrics[k] for k in ENVELOPE}
         state_metrics["sharded_state"] = getattr(
             bench_sharded_state, "LAST_METRICS", {})
         with open(args.sharded_state_json_out, "w") as f:
@@ -159,12 +194,20 @@ def main(argv=None) -> None:
     # and the serving trajectory: cold/warm submit latency, runner-cache hit
     # rate, throughput vs queue depth, admission-sim policy makespans
     if bench_service in modules:
-        service_metrics = {k: metrics[k] for k in
-                           ("schema", "smoke", "backend", "platform", "jax")}
+        service_metrics = {k: metrics[k] for k in ENVELOPE}
         service_metrics["service"] = getattr(bench_service, "LAST_METRICS", {})
         with open(args.service_json_out, "w") as f:
             json.dump(service_metrics, f, indent=2, sort_keys=True)
         print(f"wrote {args.service_json_out}", file=sys.stderr)
+    # and the cost-model trajectory: per-(workload, impl) prediction error,
+    # sim-vs-closed-form consistency, auto-vs-default knob vectors. The CI
+    # bench-smoke lane fails when pred_error_max exceeds 0.5.
+    if bench_costmodel in modules:
+        cm_metrics = {k: metrics[k] for k in ENVELOPE}
+        cm_metrics["costmodel"] = getattr(bench_costmodel, "LAST_METRICS", {})
+        with open(args.costmodel_json_out, "w") as f:
+            json.dump(cm_metrics, f, indent=2, sort_keys=True)
+        print(f"wrote {args.costmodel_json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -186,6 +186,30 @@ round-robin many jobs' dispatches on one thread (each suspended generator
 holds its own carried state, runner cache view, and round offset). The
 overflow warning is per JOB — accumulated across chunks and emitted once,
 with global round indices — rather than per dispatched chunk.
+
+Tuning (calibrated `auto` knobs)
+--------------------------------
+Every perf knob this driver exposes has an `auto` mode that resolves, in
+order: explicit argument -> environment variable -> calibrated cost model
+-> historical default. The model activates ONLY when $REPRO_CALIBRATION
+names a calibration JSON (written once per backend/device-count by
+`PYTHONPATH=src python -m repro.perf.calibrate --out calibration.json`);
+with it unset, every `auto` resolves to its historical default bit-for-bit.
+
+    knob            resolver                 env var               default
+    chunk growth    resolve_chunk_growth     $REPRO_CHUNK_GROWTH   2
+    loop impl       resolve_halt_loop        $REPRO_HALT_LOOP      'while'
+    auto capacity   resolve_capacity_factor  —                     2.0
+    chacha impl     shuffle.resolve_chacha_impl  $REPRO_CHACHA_IMPL    'pallas'
+    coalesce        shuffle.resolve_coalesce     $REPRO_SHUFFLE_COALESCE True
+    bucket growth   serve.resolve_bucket_growth  $REPRO_BUCKET_GROWTH  2.0
+    residency cap   serve.resolve_max_resident   $REPRO_SERVICE_MAX_RUNNERS unbounded
+
+`repro/perf/model.py` documents what each recommendation minimizes;
+`benchmarks/bench_costmodel.py` reports predicted-vs-measured error
+(BENCH_costmodel.json `pred_error`) so the calibration stays honest, and
+`launch/hillclimb.py --cell K` ranks full knob vectors offline by
+predicted AdmissionSim makespan.
 """
 
 from __future__ import annotations
@@ -253,6 +277,94 @@ def resolve_state_mode(mode: str = "auto") -> str:
             f"carried-state mode must be one of {_STATE_MODES} or 'auto', "
             f"got {mode!r}")
     return mode
+
+
+CHUNK_GROWTH_ENV = "REPRO_CHUNK_GROWTH"
+HALT_LOOP_ENV = "REPRO_HALT_LOOP"
+
+
+def _model_recommendation(knob: str, **ctx):
+    """Calibrated-model answer for an `auto` knob, or None when no
+    calibration is active (see `core/shuffle.py::_model_recommendation`)."""
+    from repro.perf.model import recommendation
+
+    return recommendation(knob, **ctx)
+
+
+def resolve_halt_loop(loop_impl: str | None = None) -> str:
+    """Resolve the halt-aware loop shape ('while' | 'masked_scan').
+
+    An explicit value always wins; None/'auto' defers to $REPRO_HALT_LOOP,
+    then to the calibrated cost model when one is active (the cond-gated
+    scan traces the round body twice, so the model prices its compile at
+    ~2x; `repro/perf/model.py`), then to the measured default
+    `DEFAULT_HALT_LOOP` = 'while'.
+    """
+    from_env = False
+    if loop_impl in (None, "auto"):
+        env_val = os.environ.get(HALT_LOOP_ENV)
+        if env_val is None:
+            rec = _model_recommendation("halt_loop")
+            loop_impl = DEFAULT_HALT_LOOP if rec is None else rec
+        else:
+            loop_impl, from_env = env_val.strip(), True
+    if loop_impl not in HALT_LOOP_IMPLS:
+        if from_env:
+            raise ValueError(
+                f"invalid ${HALT_LOOP_ENV}={loop_impl!r} in the environment: "
+                f"loop_impl must be one of {HALT_LOOP_IMPLS} "
+                f"(unset ${HALT_LOOP_ENV} to use the default "
+                f"{DEFAULT_HALT_LOOP!r})")
+        raise ValueError(
+            f"loop_impl must be one of {HALT_LOOP_IMPLS}, got {loop_impl!r}")
+    return loop_impl
+
+
+def resolve_chunk_growth(growth="auto", *, min_chunk: int = 1,
+                         max_rounds: int = 64,
+                         max_chunk: int | None = None) -> int:
+    """Resolve the chunk-ladder growth factor to a concrete int >= 1.
+
+    An explicit int always wins; 'auto'/None defers to $REPRO_CHUNK_GROWTH,
+    then to the calibrated cost model when one is active (which minimizes
+    distinct-ladder-size compiles + dispatch round trips for THIS
+    min_chunk/max_rounds window; `repro/perf/model.py`), then to the
+    historical default 2.
+    """
+    from_env = False
+    if growth in (None, "auto"):
+        env_val = os.environ.get(CHUNK_GROWTH_ENV)
+        if env_val is None:
+            rec = _model_recommendation(
+                "chunk_growth", min_chunk=min_chunk, max_rounds=max_rounds,
+                max_chunk=max_chunk)
+            return 2 if rec is None else int(rec)
+        growth, from_env = env_val.strip(), True
+    try:
+        val = int(growth)
+    except (TypeError, ValueError):
+        val = 0
+    if val < 1:
+        if from_env:
+            raise ValueError(
+                f"invalid ${CHUNK_GROWTH_ENV}={growth!r} in the environment: "
+                f"chunk growth must be an integer >= 1 "
+                f"(unset ${CHUNK_GROWTH_ENV} to use the default 2)")
+        raise ValueError(
+            f"growth must be an integer >= 1 or 'auto', got {growth!r}")
+    return val
+
+
+def resolve_capacity_factor() -> float:
+    """Headroom factor for the auto bucket capacity (ceil(n/R) * factor).
+
+    Consults the calibrated cost model when one is active; the model only
+    departs from the historical 2.0 when its calibration carries a
+    deployment-measured key-skew entry (overflow silently drops records, so
+    no generic probe may shrink this; `repro/perf/model.py`).
+    """
+    rec = _model_recommendation("capacity_factor")
+    return 2.0 if rec is None else float(rec)
 
 
 def _resolve_state_specs(spec: "IterativeSpec", state):
@@ -409,7 +521,8 @@ def _round_body(state, r, *, inputs, spec: IterativeSpec, axis_name: str, n_shar
     if spec.combine_fn is not None:
         mk, mv = spec.combine_fn(mk, mv)
     n_mapped = mk.shape[0]
-    capacity = spec.capacity or max(1, -(-n_mapped // n_shards) * 2)
+    capacity = spec.capacity or max(
+        1, int(np.ceil(-(-n_mapped // n_shards) * resolve_capacity_factor())))
     if trace_info is not None:
         # shapes are static, so the resolved capacity is a trace-time fact;
         # the host reads it back to annotate overflow warnings
@@ -567,9 +680,7 @@ def make_iterative_runner(
     n_shards = mesh.shape[axis_name]
     trace_info: dict = {}
     if spec.halt_fn is not None:
-        loop = loop_impl or DEFAULT_HALT_LOOP
-        if loop not in HALT_LOOP_IMPLS:
-            raise ValueError(f"loop_impl must be one of {HALT_LOOP_IMPLS}, got {loop!r}")
+        loop = resolve_halt_loop(loop_impl)
         body = partial(_halting_shard_body, spec=spec, axis_name=axis_name,
                        n_shards=n_shards, secure=secure, loop_impl=loop,
                        coalesce=coalesce, trace_info=trace_info)
@@ -717,7 +828,7 @@ def run_until(
     max_rounds: int = 64,
     round_offset: int = 0,
     min_chunk: int = 1,
-    growth: int = 2,
+    growth="auto",
     max_chunk: int | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
@@ -731,7 +842,8 @@ def run_until(
 
     The convergence-aware twin of `run_iterative_mapreduce`: rounds are
     dispatched in adaptively sized chunks — `min_chunk` rounds first, then
-    ×`growth` per dispatch up to `max_chunk` (default `max_rounds`) — and
+    ×`growth` per dispatch up to `max_chunk` (default `max_rounds`;
+    `growth` 'auto' resolves through `resolve_chunk_growth`) — and
     each chunk's fused round loop early-exits on device the moment
     `halt_fn` fires (module docstring: Termination). A job converging in 7
     rounds therefore neither compiles nor dispatches a 32-round program,
@@ -790,7 +902,7 @@ def run_until_chunks(
     max_rounds: int = 64,
     round_offset: int = 0,
     min_chunk: int = 1,
-    growth: int = 2,
+    growth="auto",
     max_chunk: int | None = None,
     chacha_impl: str | None = None,
     loop_impl: str | None = None,
@@ -817,6 +929,8 @@ def run_until_chunks(
     """
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    growth = resolve_chunk_growth(growth, min_chunk=min_chunk,
+                                  max_rounds=max_rounds, max_chunk=max_chunk)
     if min_chunk < 1 or growth < 1:
         raise ValueError(f"min_chunk and growth must be >= 1, got {min_chunk}, {growth}")
     max_chunk = min(max_chunk or max_rounds, max_rounds)

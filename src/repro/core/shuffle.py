@@ -136,19 +136,36 @@ _COALESCE_TRUE = ("1", "true", "yes", "on")
 _COALESCE_FALSE = ("0", "false", "no", "off")
 
 
+def _model_recommendation(knob: str, **ctx):
+    """Ask the calibrated cost model for an `auto` knob value.
+
+    Returns None when no calibration is active ($REPRO_CALIBRATION unset and
+    nothing set via `repro.perf.model.set_active_model`), which keeps every
+    `auto` resolver bit-for-bit on its historical default. Imported lazily:
+    `repro.perf.model` traces programs through this module, and most resolver
+    calls never need it.
+    """
+    from repro.perf.model import recommendation
+
+    return recommendation(knob, **ctx)
+
+
 def resolve_coalesce(coalesce="auto") -> bool:
     """Resolve a coalesce selector to a concrete bool (read at trace time).
 
     An explicit bool always wins; 'auto'/None defers to
-    $REPRO_SHUFFLE_COALESCE (default True). Mirrors `resolve_chacha_impl`,
-    including blaming the environment when its value is unparseable.
+    $REPRO_SHUFFLE_COALESCE, then to the calibrated cost model when one is
+    active (`repro/perf/model.py`), then to the measured default True.
+    Mirrors `resolve_chacha_impl`, including blaming the environment when
+    its value is unparseable.
     """
     if isinstance(coalesce, (bool, np.bool_)):
         return bool(coalesce)
     if coalesce in (None, "auto"):
         env_val = os.environ.get(COALESCE_ENV)
         if env_val is None:
-            return True
+            rec = _model_recommendation("coalesce")
+            return True if rec is None else bool(rec)
         val = env_val.strip().lower()
         if val in _COALESCE_TRUE:
             return True
@@ -165,16 +182,19 @@ def resolve_coalesce(coalesce="auto") -> bool:
 def resolve_chacha_impl(impl: str = "auto") -> tuple[str, bool]:
     """Resolve an impl selector to concrete (impl, interpret) kernel args.
 
-    'auto' defers to $REPRO_CHACHA_IMPL (default 'pallas'); explicit values
-    win over the environment. 'pallas-interpret' forces interpret mode even
-    on a backend with a compiled Pallas lowering; plain 'pallas' interprets
-    only off-TPU. Falls back to 'jnp' when Pallas is unimportable.
+    'auto' defers to $REPRO_CHACHA_IMPL, then to the calibrated cost model
+    when one is active (the impl whose probed us/block wins;
+    `repro/perf/model.py`), then to the measured default 'pallas'; explicit
+    values win over the environment. 'pallas-interpret' forces interpret
+    mode even on a backend with a compiled Pallas lowering; plain 'pallas'
+    interprets only off-TPU. Falls back to 'jnp' when Pallas is unimportable.
     """
     from_env = False
     if impl in (None, "auto"):
         env_val = os.environ.get(CHACHA_IMPL_ENV)
         if env_val is None:
-            impl = "pallas"
+            rec = _model_recommendation("chacha_impl")
+            impl = "pallas" if rec is None else rec
         else:
             impl, from_env = env_val, True
     if impl not in _VALID_IMPLS or impl == "auto":
@@ -535,7 +555,7 @@ class _WireAccounting:
     def note(self, *, secure: bool, nbytes: int, n_leaves: int, halted: bool = False,
              coalesced: bool = False, pad_bytes: int = 0,
              per_leaf: list | None = None, collectives: int = 0,
-             keystream_launches: int = 0):
+             keystream_launches: int = 0, keystream_blocks: int = 0):
         """Append one record per traced `keyed_all_to_all` to every sink.
 
         bytes:              payload bytes — raw leaf bytes in plaintext
@@ -551,6 +571,10 @@ class _WireAccounting:
         collectives:        all_to_all ops this shuffle traces per round.
         keystream_launches: keystream derivations (encrypt + decrypt) this
                             shuffle traces per round; 0 in plaintext mode.
+        keystream_blocks:   total ChaCha20 blocks derived per round, summed
+                            across launches (UNPADDED — kernel lane-tile
+                            padding is an impl detail the cost model applies
+                            itself); 0 in plaintext mode.
         job:                innermost `tagged` job id, or None — lets a
                             shared sink split interleaved jobs' records.
         """
@@ -561,6 +585,7 @@ class _WireAccounting:
                "wire_bytes": nbytes + pad_bytes, "pad_bytes": pad_bytes,
                "per_leaf": list(per_leaf or []), "collectives": collectives,
                "keystream_launches": keystream_launches,
+               "keystream_blocks": keystream_blocks,
                "job": self._tags[-1] if self._tags else None}
         for sink in self._sinks:
             sink.append(dict(rec))
@@ -712,6 +737,7 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
             per_leaf=per_leaf,
             collectives=1,
             keystream_launches=2,
+            keystream_blocks=2 * r * layout.total_blocks,
         )
         wire = _crypt_wire_coalesced(wire, layout, secure, my_id, dest_rows,
                                      round_index)
@@ -728,6 +754,7 @@ def keyed_all_to_all(tree, axis_name: str, secure: SecureShuffleConfig | None = 
         per_leaf=[w.size * 4 for w in wires],
         collectives=len(wires),
         keystream_launches=2 * len(wires),
+        keystream_blocks=2 * sum(w.shape[0] * -(-w.shape[1] // 16) for w in wires),
     )
 
     wires = _crypt_wires(wires, meta, secure, my_id, dest_rows, round_index)

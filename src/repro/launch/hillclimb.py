@@ -6,7 +6,7 @@ os.environ["XLA_FLAGS"] = (
 
 """§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
 
-Four cells (chosen per EXPERIMENTS.md §Perf):
+Five cells (chosen per EXPERIMENTS.md §Perf):
   A  rwkv6-1.6b|train_4k        worst non-decode roofline fraction (memory)
   B  qwen2-moe-a2.7b|decode_32k most collective-bound dominant-term cell
   C  granite-moe-3b-a800m|train_4k  the paper's technique (secure shuffle)
@@ -14,13 +14,22 @@ Four cells (chosen per EXPERIMENTS.md §Perf):
                                 through the virtual-time AdmissionSim
                                 (runtime/sim.py) on burst + straggler traces
                                 — no device, makespans only
+  K  calibrated knob vectors    the FULL auto-knob cross product (cipher
+                                impl x coalesce x halt loop x chunk growth
+                                x bucket growth x residency cap), each
+                                priced by a per-vector TimingModel from the
+                                calibrated cost model (repro/perf/model.py)
+                                and ranked by predicted AdmissionSim
+                                makespan on the same traces
 
 A/B/C variants are config overrides re-lowered via dryrun's run_cell; S
 variants are ($REPRO_BUCKET_GROWTH, $REPRO_SERVICE_MAX_RUNNERS) settings
 validated through the serving resolvers (errors name the env var, like
-resolve_chacha_impl). Results append to reports/perf.json.
+resolve_chacha_impl). Cell K needs a calibration: $REPRO_CALIBRATION if
+set, else an in-process `run_calibration(quick=True)`. Results append to
+reports/perf.json.
 
-Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|S] [--mesh single_pod]
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|S|K] [--mesh single_pod]
 """
 
 import argparse
@@ -112,9 +121,82 @@ def run_service_cell(bucket_growth, max_resident):
     return out
 
 
+# Calibrated knob-vector search (cell K): the cross product every `auto`
+# resolver draws from, ranked offline by predicted makespan. Kept small on
+# purpose — 2x2x2x3x3x2 = 144 vectors, each priced in milliseconds.
+KNOB_SPACE = {
+    "chacha_impl": ("pallas", "jnp"),
+    "coalesce": (True, False),
+    "loop_impl": ("while", "masked_scan"),
+    "chunk_growth": (2, 3, 4),
+    "bucket_growth": (1.5, 2.0, 4.0),
+    "max_resident": (None, 8),
+}
+
+
+def rank_knob_vectors(model=None, *, top: int = 10) -> dict:
+    """Cell K: rank the full auto-knob cross product by PREDICTED makespan.
+
+    Each vector gets its own `TimingModel` (cipher impl sets crypto
+    bandwidth, masked_scan doubles compile, per-leaf shuffle multiplies
+    collective latency) and is replayed through AdmissionSim on the burst +
+    straggler traces — pure prediction, no device work beyond the (cached
+    or quick) calibration. The top vector is what the `auto` resolvers
+    would jointly pick if they searched instead of scoring knobs one at a
+    time; agreement between the two is a model-consistency check.
+    """
+    import itertools as it
+
+    from repro.perf.model import CostModel, active_model
+    from repro.runtime.sim import AdmissionSim, burst_trace, straggler_trace
+
+    if model is None:
+        model = active_model()
+    if model is None:
+        from repro.compat import make_mesh
+        from repro.perf.calibrate import run_calibration
+
+        # Probe on ONE device: this module forces a 512-device host platform
+        # for the A/B/C lowering cells, and the per-device probe constants
+        # don't depend on the mesh width.
+        model = CostModel(run_calibration(make_mesh((1,), ("data",)),
+                                          quick=True))
+
+    traces = [("burst", burst_trace()), ("straggler", straggler_trace())]
+    names = list(KNOB_SPACE)
+    ranked = []
+    for combo in it.product(*KNOB_SPACE.values()):
+        vec = dict(zip(names, combo))
+        timing = model.timing_model(impl=vec["chacha_impl"],
+                                    loop_impl=vec["loop_impl"],
+                                    coalesce=vec["coalesce"])
+        sim = AdmissionSim(timing, bucket_growth=vec["bucket_growth"],
+                           max_resident=vec["max_resident"],
+                           chunk_growth=vec["chunk_growth"])
+        total = sum(sim.run(t, "bucketed")["makespan_s"] for _, t in traces)
+        ranked.append({"vector": vec, "predicted_makespan_s": total})
+    ranked.sort(key=lambda r: r["predicted_makespan_s"])
+    resolver_vec = {
+        "chacha_impl": model.recommend("chacha_impl"),
+        "coalesce": model.recommend("coalesce"),
+        "loop_impl": model.recommend("halt_loop"),
+        "chunk_growth": model.recommend("chunk_growth"),
+        "bucket_growth": model.recommend("bucket_growth"),
+        "max_resident": model.recommend("max_resident"),
+    }
+    return {
+        "status": "OK",
+        "backend": model.cal.backend,
+        "n_vectors": len(ranked),
+        "best": ranked[0],
+        "top": ranked[:top],
+        "resolver_vector": resolver_vec,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C", "S"])
+    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C", "S", "K"])
     ap.add_argument("--mesh", default="single_pod")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -145,6 +227,27 @@ def main():
                 print(f"   burst bucketed={burst['bucketed_makespan_s']:.0f}s "
                       f"per-job={burst['per_job_makespan_s']:.0f}s "
                       f"compiles={burst['compiles']} evict={burst['evictions']}")
+            else:
+                print(f"   FAIL {r['error'][:160]}")
+
+    if args.cell in (None, "K"):
+        key = "K|knobs|costmodel|v0_full_cross"
+        if key in results and not args.force:
+            print(f"[cached] {key}")
+        else:
+            print(f"[run] {key}", flush=True)
+            try:
+                r = rank_knob_vectors()
+            except Exception as e:
+                r = {"status": "FAIL", "error": str(e)}
+            results[key] = r
+            with open(REPORT, "w") as f:
+                json.dump(results, f, indent=1)
+            if r["status"] == "OK":
+                best = r["best"]
+                print(f"   best={best['vector']} "
+                      f"pred_makespan={best['predicted_makespan_s']:.0f}s")
+                print(f"   resolver_vector={r['resolver_vector']}")
             else:
                 print(f"   FAIL {r['error'][:160]}")
 

@@ -1,0 +1,25 @@
+"""Trace-calibrated performance substrate.
+
+`calibrate` runs micro-probes once per (backend, device-count) and persists
+them as a calibration JSON; `model` combines a calibration with trace-time
+facts (wire bytes + keystream blocks from `core/shuffle.py`'s accounting,
+equation counts from `tools/jaxprs.py`) into per-round steady-state,
+compile-time, and wire-byte predictions, and answers the `auto` resolvers'
+knob questions. With no calibration active every resolver keeps its
+historical default bit-for-bit — the model is strictly additive.
+"""
+
+from repro.perf.calibrate import (  # noqa: F401
+    CALIBRATION_ENV,
+    Calibration,
+    load_calibration,
+    run_calibration,
+    save_calibration,
+)
+from repro.perf.model import (  # noqa: F401
+    CostModel,
+    active_model,
+    clear_active_model,
+    recommendation,
+    set_active_model,
+)

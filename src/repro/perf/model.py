@@ -1,0 +1,375 @@
+"""Calibrated cost model: predict round time / compile time / wire bytes,
+and answer the `auto` resolvers' knob questions.
+
+The byteprofile idiom (ROADMAP): replay a TRACE through per-op costs. Here
+the trace is jax's own — `trace_workload` runs `jax.make_jaxpr` over a
+runner inside `record_wire_bytes()`, so the wire bytes, collective count,
+keystream launches, and ChaCha block count of one round are read off the
+traced program (the accounting fires at trace time), and the equation count
+comes from `tools/jaxprs.py::total_eqns`. Predictions multiply those counts
+by the micro-probed constants in a `Calibration`:
+
+    round_us   = launches·launch_us + eff_blocks·us_per_block      (crypto)
+               + collectives·a2a.base_us + wire_bytes·a2a.us_per_byte
+               + round.base_us + n_local·round.us_per_item         (compute)
+    compile_s  = eqns scaled by the probe program whose equations look most
+                 like this one (keystream-bearing programs scale off the
+                 chacha probe's compile, plain ones off the round probe's)
+    wire_bytes = straight off the trace (already exact)
+
+Knob recommendations (`recommendation(knob)`) are what the `auto` resolvers
+in `core/shuffle.py`, `core/driver.py`, and `serve/service.py` consult; the
+ACTIVE model comes from `$REPRO_CALIBRATION` (a JSON written by
+`perf/calibrate.py`) or an explicit `set_active_model`. No active model →
+every recommendation is None → resolvers keep their historical defaults
+bit-for-bit.
+
+Known blind spot: workload map/reduce math is priced per ITEM with one
+generic slope (the round probe's), so a map_fn doing heavy per-item math is
+under-predicted. `benchmarks/bench_costmodel.py`'s pred_error section keeps
+this honest against real runs.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.perf.calibrate import (
+    CALIBRATION_ENV,
+    Calibration,
+    effective_blocks,
+    load_calibration,
+)
+
+_UNSET = object()
+
+
+@dataclass(frozen=True)
+class RoundTrace:
+    """Per-round facts read off ONE traced runner program."""
+
+    n_eqns: int
+    wire_bytes: int
+    collectives: int
+    keystream_launches: int
+    keystream_blocks: int  # unpadded, summed over launches
+    n_shards: int
+    n_local_items: int
+    secure: bool
+    coalesced: bool
+
+    @property
+    def blocks_per_launch_row(self) -> int:
+        """Unpadded ChaCha blocks per wire row of one launch."""
+        if not self.keystream_launches:
+            return 0
+        return max(1, self.keystream_blocks
+                   // (self.keystream_launches * self.n_shards))
+
+
+def trace_workload(runner, inputs, state, *, n_shards: int,
+                   n_local_items: int, round_offset=0) -> RoundTrace:
+    """Trace one runner dispatch and distill it into a `RoundTrace`.
+
+    Uses `runner.abstract_fn` (the un-jitted body `make_iterative_runner`
+    exposes): the shuffle's trace-time accounting fires during
+    `jax.make_jaxpr`, so the wire numbers are the program's own, not an
+    estimate. Rounds fused by scan/while trace their shuffle ONCE — exactly
+    the per-round quantity the model prices; the masked-scan loop's
+    halted-skip branch contributes only `halted` records, which are
+    dropped here.
+    """
+    from repro.core.shuffle import record_wire_bytes
+    from repro.tools.jaxprs import total_eqns
+
+    with record_wire_bytes() as recs:
+        jaxpr = jax.make_jaxpr(runner.abstract_fn)(
+            inputs, state, jnp.uint32(round_offset))
+    live = [r for r in recs if not r["halted"]]
+    if not live:
+        raise ValueError("runner traced no shuffle — nothing to model")
+    rec = live[0]
+    return RoundTrace(
+        n_eqns=total_eqns(jaxpr),
+        wire_bytes=int(rec["wire_bytes"]),
+        collectives=int(rec["collectives"]),
+        keystream_launches=int(rec["keystream_launches"]),
+        keystream_blocks=int(rec["keystream_blocks"]),
+        n_shards=max(1, int(n_shards)),
+        n_local_items=int(n_local_items),
+        secure=bool(rec["secure"]),
+        coalesced=bool(rec["coalesced"]),
+    )
+
+
+class CostModel:
+    """Predictions + knob recommendations over one `Calibration`."""
+
+    def __init__(self, cal: Calibration):
+        self.cal = cal
+        self._memo: dict = {}
+
+    # -- predictions -------------------------------------------------------
+
+    def _chacha(self, impl: str | None) -> tuple[str, dict]:
+        chacha = self.cal.chacha
+        if impl is None or impl == "auto":
+            impl = self.recommend_chacha_impl()
+        entry = chacha.get(impl)
+        if entry is None and impl == "pallas-interpret":
+            entry = chacha.get("pallas")
+        if entry is None:
+            entry = next(iter(chacha.values()))
+        return impl, entry
+
+    def predict_round_us(self, trace: RoundTrace, impl: str | None = None) -> float:
+        """Steady-state microseconds for ONE executed round."""
+        cal = self.cal
+        us = (cal.round["base_us"]
+              + trace.n_local_items * cal.round["us_per_item"]
+              + trace.collectives * cal.all_to_all["base_us"]
+              + trace.wire_bytes * cal.all_to_all["us_per_byte"])
+        if trace.keystream_launches:
+            impl, entry = self._chacha(impl)
+            kern_impl, interpret = entry.get("resolved", [impl, True])
+            eff = trace.keystream_launches * effective_blocks(
+                trace.n_shards, trace.blocks_per_launch_row, kern_impl,
+                bool(interpret))
+            us += (trace.keystream_launches * entry["launch_us"]
+                   + eff * entry["us_per_block"])
+        return us
+
+    def predict_compile_s(self, trace: RoundTrace, impl: str | None = None) -> float:
+        """XLA compile seconds for the runner the trace came from.
+
+        Equation-count scaling anchored on the probe program nearest in
+        kind: keystream-bearing traces scale off the chacha probe (its
+        equations dominate secure compiles), plain ones off the round
+        probe. The plain-XLA s_per_eqn line is the floor.
+        """
+        cal = self.cal
+        floor = cal.compile["base_s"] + trace.n_eqns * cal.compile["s_per_eqn"]
+        if trace.keystream_launches:
+            _, entry = self._chacha(impl)
+            anchor_s, anchor_eqns = entry["compile_s"], entry["compile_eqns"]
+        else:
+            anchor_s, anchor_eqns = (cal.round["compile_s"],
+                                     cal.round["compile_eqns"])
+        scaled = anchor_s * trace.n_eqns / max(1, anchor_eqns)
+        return max(floor, scaled)
+
+    def predict_wire_bytes(self, trace: RoundTrace) -> int:
+        """Wire bytes per round — exact, straight off the trace."""
+        return trace.wire_bytes
+
+    def timing_model(self, *, impl: str | None = None,
+                     loop_impl: str | None = None, coalesce: bool = True):
+        """A `runtime/sim.py::TimingModel` with calibrated constants.
+
+        This is how AdmissionSim's virtual time and the model's predictions
+        stay consistent: both read the same probes. Crypto bandwidth comes
+        from the chosen impl's us/block (64 bytes each); compile cost is
+        the secure-probe compile + the round machinery's.
+
+        The keyword knobs let the offline search (`launch/hillclimb.py`
+        cell K) price a WHOLE knob vector: `impl` picks the cipher probe,
+        `loop_impl='masked_scan'` doubles compile (both branches trace the
+        body, as in `recommend_halt_loop`), and `coalesce=False` pays one
+        collective latency per state leaf instead of one total (the same
+        nominal tree width `recommend_coalesce` prices).
+        """
+        from repro.runtime.sim import TimingModel
+
+        cal = self.cal
+        _, entry = self._chacha(impl)
+        us_blk = max(entry["us_per_block"], 1e-9)
+        compile_s = entry["compile_s"] + cal.round["compile_s"]
+        if loop_impl == "masked_scan":
+            compile_s *= 2.0
+        nominal_leaves = 1 if coalesce else 2
+        return TimingModel(
+            net_latency_s=cal.all_to_all["base_us"] * 1e-6 * nominal_leaves,
+            net_bw_bytes_s=1.0 / max(cal.all_to_all["us_per_byte"] * 1e-6, 1e-15),
+            enclave_call_s=cal.round["base_us"] * 1e-6,
+            crypto_bw_bytes_s=64.0 / (us_blk * 1e-6),
+            item_cost_s=cal.round["us_per_item"] * 1e-6,
+            xla_compile_s=compile_s,
+            dispatch_s=cal.dispatch["base_us"] * 1e-6,
+        )
+
+    # -- knob recommendations ---------------------------------------------
+
+    def recommend(self, knob: str, **ctx):
+        key = (knob, tuple(sorted(ctx.items())))
+        if key not in self._memo:
+            self._memo[key] = getattr(self, f"recommend_{knob}")(**ctx)
+        return self._memo[key]
+
+    def recommend_chacha_impl(self) -> str:
+        """The probed impl with the cheapest nominal launch (256 blocks)."""
+        def score(entry):
+            return entry["launch_us"] + 256 * entry["us_per_block"]
+
+        return min(self.cal.chacha, key=lambda i: score(self.cal.chacha[i]))
+
+    def recommend_coalesce(self) -> bool:
+        """Coalesced iff ONE collective + 2 launches beats per-leaf's
+        L + 2L at a nominal tree width — with non-negative probed base
+        costs this is always True; the comparison stays, priced, so a
+        future negative-overhead backend could flip it."""
+        _, entry = self._chacha(None)
+        nominal_leaves = 2
+        coalesced = self.cal.all_to_all["base_us"] + 2 * entry["launch_us"]
+        per_leaf = nominal_leaves * (self.cal.all_to_all["base_us"]
+                                     + 2 * entry["launch_us"])
+        return coalesced <= per_leaf
+
+    def recommend_halt_loop(self) -> str:
+        """'while' vs 'masked_scan': the cond-gated scan traces the round
+        body into an extra branch (~2x the equations to compile) and runs
+        the masked tail at steady state; 'while' pays neither. Priced via
+        the compile predictor so the margin is visible in calibrated terms.
+        """
+        _, entry = self._chacha(None)
+        body_s = entry["compile_s"]
+        while_cost = body_s
+        masked_cost = 2.0 * body_s  # live + skip branches both trace the body
+        return "while" if while_cost <= masked_cost else "masked_scan"
+
+    def recommend_chunk_growth(self, min_chunk: int = 1, max_rounds: int = 64,
+                               max_chunk: int | None = None) -> int:
+        """Geometric chunk-ladder growth minimizing compile + dispatch cost.
+
+        Each DISTINCT chunk size on the ladder compiles one program (the
+        serving RunnerCache regime); each dispatch pays the probed host
+        round trip. Steeper growth reaches max_chunk in fewer distinct
+        sizes — the compile term, tens of seconds on the secure path,
+        dominates the dispatch term, so calibrated backends favor it.
+        """
+        max_chunk = max_rounds if max_chunk is None else max_chunk
+        _, entry = self._chacha(None)
+        compile_s = entry["compile_s"] + self.cal.round["compile_s"]
+        dispatch_s = self.cal.dispatch["base_us"] * 1e-6
+
+        def cost(growth: int) -> float:
+            sizes, dispatches, done = set(), 0, 0
+            chunk = max(1, min_chunk)
+            while done < max_rounds:
+                n = min(chunk, max_rounds - done)
+                sizes.add(n)
+                dispatches += 1
+                done += n
+                chunk = min(chunk * growth, max_chunk)
+            return len(sizes) * compile_s + dispatches * dispatch_s
+
+        return min((2, 3, 4), key=cost)
+
+    def recommend_bucket_growth(self) -> float:
+        """Bucket-ladder growth minimizing AdmissionSim makespan under the
+        calibrated TimingModel, summed over the burst + straggler traces
+        (the offline knob search `launch/hillclimb.py` runs in full)."""
+        from repro.runtime.sim import AdmissionSim, burst_trace, straggler_trace
+
+        timing = self.timing_model()
+        traces = [burst_trace(), straggler_trace()]
+
+        def makespan(growth: float) -> float:
+            sim = AdmissionSim(timing, bucket_growth=growth)
+            return sum(sim.run(t, "bucketed")["makespan_s"] for t in traces)
+
+        return min((1.5, 2.0, 4.0), key=makespan)
+
+    def recommend_max_resident(self):
+        """Runner-cache residency cap. Evicting a live program only ever
+        adds recompiles (the sim charges nothing for residency), so the
+        predicted optimum is unbounded — returned as the string
+        'unbounded' so callers can tell "model says no cap" from "no
+        model"."""
+        return "unbounded"
+
+    def recommend_capacity_factor(self) -> float:
+        """Auto-capacity headroom factor (ceil(n/R) * factor).
+
+        Overflow is KEY-DISTRIBUTION-dependent — no backend probe can bound
+        another workload's skew, and an undershot capacity silently drops
+        records. The model therefore only recommends a non-default factor
+        when the calibration carries a deployment-measured
+        `extra["capacity_factor"]`; otherwise it prices the conservative
+        historical 2.0.
+        """
+        return float(self.cal.extra.get("capacity_factor", 2.0))
+
+    def recommend_sort_capacity(self, bucket: int, n_shards: int) -> int:
+        """Per-(source, dest) sort capacity: smallest wire that stays
+        LOSSLESS. Absent measured key skew in the calibration, the binding
+        constraint is the worst case (one splitter range owns a source's
+        whole slice), so the lossless minimum is bucket // n_shards —
+        candidates below it can drop records, which no wire saving buys
+        back."""
+        return max(1, bucket // max(1, n_shards))
+
+
+# -- active-model plumbing ---------------------------------------------------
+
+_active: object = _UNSET  # explicit override: a CostModel, or None = forced off
+_env_cache: tuple | None = None  # (path, mtime, CostModel | None)
+
+
+def set_active_model(model: CostModel | None) -> None:
+    """Explicitly set (or with None, force OFF) the active model.
+
+    Wins over $REPRO_CALIBRATION until `clear_active_model`. Test and
+    benchmark hook — production activation is the env var.
+    """
+    global _active
+    _active = model
+
+
+def clear_active_model() -> None:
+    """Drop any explicit override AND the env-file cache."""
+    global _active, _env_cache
+    _active = _UNSET
+    _env_cache = None
+
+
+def active_model() -> CostModel | None:
+    """The model the `auto` resolvers consult, or None (= use defaults).
+
+    Resolution order: explicit `set_active_model` value, else the
+    calibration JSON named by $REPRO_CALIBRATION (entry matching this
+    process's backend/device-count; cached by file mtime), else None. An
+    unreadable file or missing entry resolves to None — the strictly-
+    additive contract: a bad calibration can cost performance, never
+    correctness or a crash at resolve time.
+    """
+    global _env_cache
+    if _active is not _UNSET:
+        return _active  # type: ignore[return-value]
+    path = os.environ.get(CALIBRATION_ENV)
+    if not path:
+        return None
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        return None
+    if _env_cache and _env_cache[0] == path and _env_cache[1] == mtime:
+        return _env_cache[2]
+    try:
+        cal = load_calibration(path)
+        model = None if cal is None else CostModel(cal)
+    except Exception:
+        model = None
+    _env_cache = (path, mtime, model)
+    return model
+
+
+def recommendation(knob: str, **ctx):
+    """`active_model().recommend(knob)`, or None when no model is active."""
+    model = active_model()
+    if model is None:
+        return None
+    return model.recommend(knob, **ctx)

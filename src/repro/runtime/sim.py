@@ -168,12 +168,17 @@ class Cluster:
 
 @dataclass
 class SimJob:
-    """One job in an arrival trace (sizes in items, budget in rounds)."""
+    """One job in an arrival trace (sizes in items, budget in rounds).
+
+    `priority > 0` jobs admit ahead of the normal FIFO class, mirroring
+    `SecureJobService.submit_*(priority=...)`; active jobs are never
+    preempted."""
 
     arrival_s: float
     n_items: int
     n_rounds: int
     kind: str = "kmeans"
+    priority: int = 0
 
 
 def burst_trace(n_jobs: int = 16, *, base_items: int = 4096, jitter: float = 0.3,
@@ -234,7 +239,8 @@ class AdmissionSim:
     def __init__(self, timing: TimingModel | None = None, *, n_shards: int = 8,
                  max_concurrent: int = 4, bucket_growth: float = 2.0,
                  max_resident: int | None = None,
-                 min_chunk: int = 1, max_chunk: int = 8):
+                 min_chunk: int = 1, max_chunk: int = 8,
+                 chunk_growth: int = 2):
         self.timing = timing or TimingModel()
         self.n_shards = n_shards
         self.max_concurrent = max_concurrent
@@ -242,6 +248,7 @@ class AdmissionSim:
         self.max_resident = max_resident  # LRU program-cache cap (None = unbounded)
         self.min_chunk = max(1, min_chunk)
         self.max_chunk = max(self.min_chunk, max_chunk)
+        self.chunk_growth = max(1, chunk_growth)  # geometric ladder factor
 
     def run(self, jobs: list[SimJob], policy: str = "bucketed") -> dict:
         if policy not in self.POLICIES:
@@ -263,7 +270,16 @@ class AdmissionSim:
                 t = waiting[0][0].arrival_s
             while waiting and len(active) < self.max_concurrent \
                     and waiting[0][0].arrival_s <= t:
-                job, idx = waiting.pop(0)
+                # two-level admission (mirrors SecureJobService): among the
+                # ARRIVED prefix, high-priority jobs drain first, FIFO within
+                # each class; active jobs are never preempted.
+                n_arrived = 0
+                while (n_arrived < len(waiting)
+                       and waiting[n_arrived][0].arrival_s <= t):
+                    n_arrived += 1
+                k = next((k for k in range(n_arrived)
+                          if waiting[k][0].priority > 0), 0)
+                job, idx = waiting.pop(k)
                 n_padded = (bucket_for(job.n_items, multiple=self.n_shards,
                                        growth=self.bucket_growth)
                             if policy == "bucketed" else job.n_items)
@@ -289,7 +305,7 @@ class AdmissionSim:
                 n_local = -(-st["n_padded"] // self.n_shards)
                 t += self.timing.dispatch_s + n * self.timing.round_delay(n_local)
                 st["done"] += n
-                st["chunk"] = min(st["chunk"] * 2, self.max_chunk)
+                st["chunk"] = min(st["chunk"] * self.chunk_growth, self.max_chunk)
                 if st["done"] >= job.n_rounds:
                     active.remove(st)
                     latency[st["idx"]] = t - job.arrival_s

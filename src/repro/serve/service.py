@@ -75,20 +75,35 @@ BUCKET_GROWTH_ENV = "REPRO_BUCKET_GROWTH"
 MAX_RUNNERS_ENV = "REPRO_SERVICE_MAX_RUNNERS"
 
 
+def _model_recommendation(knob: str, **ctx):
+    """Calibrated-model answer for an `auto` knob, or None when no
+    calibration is active (see `core/shuffle.py::_model_recommendation`)."""
+    from repro.perf.model import recommendation
+
+    return recommendation(knob, **ctx)
+
+
 def resolve_bucket_growth(growth=None) -> float:
     """Resolve the geometric bucket-ladder growth factor (a float > 1).
 
-    None/'auto' defers to $REPRO_BUCKET_GROWTH (default 2.0 — power-of-two
-    buckets); an explicit number always wins over the environment. Smaller
-    factors waste less padding per job but compile more distinct buckets;
-    the trade is measured by `runtime/sim.py::AdmissionSim`.
+    None/'auto' defers to $REPRO_BUCKET_GROWTH, then to the calibrated cost
+    model when one is active (the factor minimizing AdmissionSim makespan
+    under the calibrated TimingModel; `repro/perf/model.py`), then to the
+    default 2.0 — power-of-two buckets; an explicit number always wins over
+    the environment. Smaller factors waste less padding per job but compile
+    more distinct buckets; the trade is measured by
+    `runtime/sim.py::AdmissionSim`.
     """
     from_env = False
     if growth in (None, "auto"):
         env_val = os.environ.get(BUCKET_GROWTH_ENV)
         if env_val is None:
-            return 2.0
-        growth, from_env = env_val.strip(), True
+            rec = _model_recommendation("bucket_growth")
+            if rec is None:
+                return 2.0
+            growth = rec
+        else:
+            growth, from_env = env_val.strip(), True
     try:
         val = float(growth)
     except (TypeError, ValueError):
@@ -107,19 +122,26 @@ def resolve_bucket_growth(growth=None) -> float:
 def resolve_max_resident(limit="auto") -> int | None:
     """Resolve the runner-cache residency cap (int >= 1, or None = unbounded).
 
-    'auto' defers to $REPRO_SERVICE_MAX_RUNNERS (default unbounded; 0 or
-    'none' mean unbounded explicitly); an explicit int/None always wins over
-    the environment. The cap bounds how many compiled runner programs stay
-    resident — the LRU loser is evicted (and its compiles with it).
+    'auto' defers to $REPRO_SERVICE_MAX_RUNNERS, then to the calibrated
+    cost model when one is active (which answers 'unbounded' — evictions
+    only ever add recompiles; `repro/perf/model.py`), then to the default
+    unbounded (0 or 'none' mean unbounded explicitly); an explicit int/None
+    always wins over the environment. The cap bounds how many compiled
+    runner programs stay resident — the LRU loser is evicted (and its
+    compiles with it).
     """
     from_env = False
     if limit == "auto":
         env_val = os.environ.get(MAX_RUNNERS_ENV)
         if env_val is None:
-            return None
-        limit, from_env = env_val.strip().lower(), True
-        if limit in ("none", "unbounded", "0"):
-            return None
+            rec = _model_recommendation("max_resident")
+            if rec is None or rec == "unbounded":
+                return None
+            limit = rec
+        else:
+            limit, from_env = env_val.strip().lower(), True
+    if limit in ("none", "unbounded", "0"):
+        return None
     if limit is None:
         return None
     try:
@@ -347,6 +369,7 @@ class JobHandle:
     bucket: int
     round_base: int
     max_rounds: int
+    priority: int = 0
     future: Future = field(default_factory=Future, repr=False)
     submitted_at: float = 0.0
     started_at: float | None = None
@@ -464,7 +487,11 @@ class SecureJobService:
         self.state_mode = resolve_state_mode("auto")
 
         self._cv = threading.Condition()
+        # two-level admission queue: priority > 0 jobs admit ahead of the
+        # FIFO normal class (FIFO within each class); already-ACTIVE jobs
+        # are never preempted — priority orders admission, not dispatch
         self._pending: deque[_Job] = deque()
+        self._pending_high: deque[_Job] = deque()
         self._active: list[_Job] = []
         self._next_id = 0
         self._round_base = 0
@@ -496,7 +523,7 @@ class SecureJobService:
             return {
                 "jobs_completed": self._jobs_completed,
                 "jobs_active": len(self._active),
-                "jobs_pending": len(self._pending),
+                "jobs_pending": len(self._pending) + len(self._pending_high),
                 "round_base": self._round_base,
                 "cache": self.cache.stats(),
             }
@@ -506,12 +533,16 @@ class SecureJobService:
     def _scheduler(self):
         while True:
             with self._cv:
-                while not self._pending and not self._active and not self._closed:
+                while (not self._pending and not self._pending_high
+                       and not self._active and not self._closed):
                     self._cv.wait()
-                if self._closed and not self._pending and not self._active:
+                if (self._closed and not self._pending
+                        and not self._pending_high and not self._active):
                     return
-                while self._pending and len(self._active) < self.max_concurrent:
-                    self._active.append(self._pending.popleft())
+                while ((self._pending or self._pending_high)
+                       and len(self._active) < self.max_concurrent):
+                    queue = self._pending_high or self._pending
+                    self._active.append(queue.popleft())
                 batch = list(self._active)
             for job in batch:
                 try:
@@ -541,20 +572,25 @@ class SecureJobService:
         else:
             job.handle.future.set_result(value)
 
-    def _submit(self, kind, n, bucket, max_rounds, make_gen, finalize) -> JobHandle:
+    def _submit(self, kind, n, bucket, max_rounds, make_gen, finalize,
+                priority: int = 0) -> JobHandle:
+        priority = int(priority)
+        if priority < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
         with self._cv:
             if self._closed:
                 raise RuntimeError("SecureJobService is closed")
             handle = JobHandle(
                 job_id=self._next_id, kind=kind, n=n, bucket=bucket,
                 round_base=self._round_base, max_rounds=max_rounds,
-                submitted_at=time.perf_counter(),
+                priority=priority, submitted_at=time.perf_counter(),
             )
             self._next_id += 1
             # keystream disjointness across jobs: reserve this job's whole
             # round budget on the monotone per-service counter
             self._round_base += max_rounds
-            self._pending.append(_Job(handle, make_gen, finalize))
+            queue = self._pending_high if priority > 0 else self._pending
+            queue.append(_Job(handle, make_gen, finalize))
             self._cv.notify()
         return handle
 
@@ -582,7 +618,8 @@ class SecureJobService:
     def submit_kmeans(self, points, k: int, *, threshold: float | None = None,
                       max_rounds: int = 64, weights=None, init_centers=None,
                       min_chunk: int | None = None,
-                      max_chunk: int | None = None) -> JobHandle:
+                      max_chunk: int | None = None,
+                      priority: int = 0) -> JobHandle:
         """k-means to convergence (paper §V). Result: {"centers" (k, d),
         "n_iter", "shifts" (n_iter,), "halted", "n_dispatches"}.
 
@@ -590,6 +627,8 @@ class SecureJobService:
         data) rides in carried state (`runtime_threshold=True`), so jobs
         with different data share one compiled program per bucket; rows
         padded up to the bucket carry weight 0 and contribute nothing.
+        `priority > 0` admits ahead of the normal FIFO class (active jobs
+        are never preempted).
         """
         points = np.asarray(points, np.float32)
         if points.ndim != 2 or points.shape[0] < 1:
@@ -635,13 +674,15 @@ class SecureJobService:
                 "n_dispatches": res.n_dispatches,
             }
 
-        return self._submit("kmeans", n, bucket, max_rounds, make_gen, finalize)
+        return self._submit("kmeans", n, bucket, max_rounds, make_gen, finalize,
+                            priority=priority)
 
     def submit_sort(self, values, *, balance: float = 1.5, max_rounds: int = 4,
                     lo: float | None = None, hi: float | None = None,
                     capacity: int | None = None,
                     min_chunk: int | None = None,
-                    max_chunk: int | None = None) -> JobHandle:
+                    max_chunk: int | None = None,
+                    priority: int = 0) -> JobHandle:
         """Sampling sort with splitter refinement. Result: {"sorted" (<= n,),
         "counts" (R,), "rounds", "halted", "dropped" (rounds,)}.
 
@@ -658,7 +699,8 @@ class SecureJobService:
         r = self.n_shards
         bucket = bucket_for(n, multiple=r, growth=self.bucket_growth)
         if capacity is None:
-            capacity = bucket // r
+            rec = _model_recommendation("sort_capacity", bucket=bucket, n_shards=r)
+            capacity = bucket // r if rec is None else int(rec)
         if lo is None:
             lo = float(values.min())
         if hi is None:
@@ -699,12 +741,14 @@ class SecureJobService:
                 "dropped": np.asarray(res.dropped),
             }
 
-        return self._submit("sort", n, bucket, max_rounds, make_gen, finalize)
+        return self._submit("sort", n, bucket, max_rounds, make_gen, finalize,
+                            priority=priority)
 
     def submit_grep(self, tokens, patterns, *, n_rounds: int = 4,
                     max_matches: int | None = None,
                     min_chunk: int | None = None,
-                    max_chunk: int | None = None) -> JobHandle:
+                    max_chunk: int | None = None,
+                    priority: int = 0) -> JobHandle:
         """Streaming grep over the token stream. Result: {"counts" (n_pat,),
         "per_round" (rounds, n_pat), "rounds", "halted"}.
 
@@ -752,4 +796,5 @@ class SecureJobService:
                 "halted": res.halted,
             }
 
-        return self._submit("grep", n, bucket, n_rounds, make_gen, finalize)
+        return self._submit("grep", n, bucket, n_rounds, make_gen, finalize,
+                            priority=priority)

@@ -74,6 +74,27 @@ def count_many(jaxpr, names) -> dict:
     return counts
 
 
+def total_eqns(jaxpr) -> int:
+    """Total equation count, recursing into nested jaxprs.
+
+    The size proxy the perf cost model (`repro/perf/model.py`) feeds its
+    compile-time predictor: XLA compile time grows with the number of traced
+    equations it must lower, and the calibration probe measures seconds per
+    equation on a representative program. Same recursion semantics as
+    `count_many` — nested call sites (pjit, scan, while, cond branches,
+    shard_map bodies) each contribute their own counts.
+    """
+    if isinstance(jaxpr, _core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                n += total_eqns(sub)
+    return n
+
+
 def collective_counts(jaxpr) -> dict:
     """Count every known collective primitive: {name: count}.
 

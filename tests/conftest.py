@@ -26,6 +26,28 @@ import types
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+import pytest
+
+
+@pytest.fixture
+def no_calibration(monkeypatch):
+    """Pin the `auto` resolvers to their historical defaults.
+
+    The CI tier1-autotune lane runs this suite WITH $REPRO_CALIBRATION set,
+    under which `auto` knobs follow the calibrated model instead of the
+    hard-coded fallbacks. Tests that assert the fallback values (the
+    no-calibration contract) opt into this fixture: it strips the env var
+    and forces the active model OFF for the test's duration.
+    """
+    from repro.perf.model import clear_active_model, set_active_model
+    from repro.perf.calibrate import CALIBRATION_ENV
+
+    monkeypatch.delenv(CALIBRATION_ENV, raising=False)
+    set_active_model(None)  # forced off — wins over any cached env model
+    yield
+    clear_active_model()
+
+
 def run_in_subprocess(code: str, devices: int = 8, timeout: int = 420):
     """Run a snippet in a fresh interpreter with N forced host devices.
 

@@ -1,0 +1,256 @@
+"""Calibrated cost model (`repro/perf/`): the no-calibration contract
+(every `auto` resolver bit-for-bit on its historical default), synthetic-
+calibration recommendations driving the resolvers, calibration persistence
+and $REPRO_CALIBRATION activation, trace-driven prediction plumbing, and
+the kernel padding model (`effective_blocks`)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.compat import make_mesh
+from repro.core.driver import (
+    IterativeSpec,
+    make_iterative_runner,
+    resolve_capacity_factor,
+    resolve_chunk_growth,
+    resolve_halt_loop,
+)
+from repro.core.shuffle import (
+    CHACHA_IMPL_ENV,
+    SecureShuffleConfig,
+    resolve_chacha_impl,
+    resolve_coalesce,
+)
+from repro.crypto import chacha
+from repro.perf.calibrate import (
+    CALIBRATION_ENV,
+    Calibration,
+    effective_blocks,
+    load_calibration,
+    save_calibration,
+)
+from repro.perf.model import (
+    CostModel,
+    active_model,
+    clear_active_model,
+    recommendation,
+    set_active_model,
+    trace_workload,
+)
+from repro.serve.service import resolve_bucket_growth, resolve_max_resident
+
+
+def _cal(*, pallas_block=0.001, jnp_block=0.002, launch_us=5.0,
+         extra=None) -> Calibration:
+    """A hand-built calibration with known constants (no probing)."""
+    def entry(blk, resolved):
+        return {"us_per_block": blk, "launch_us": launch_us,
+                "compile_s": 8.0, "compile_eqns": 400, "resolved": resolved}
+
+    return Calibration(
+        backend="cpu", n_devices=1,
+        chacha={"pallas": entry(pallas_block, ["pallas", True]),
+                "jnp": entry(jnp_block, ["jnp", True])},
+        all_to_all={"us_per_byte": 0.001, "base_us": 50.0},
+        dispatch={"base_us": 100.0},
+        round={"us_per_item": 0.01, "base_us": 200.0,
+               "compile_s": 2.0, "compile_eqns": 150},
+        compile={"s_per_eqn": 0.004, "base_s": 0.05},
+        extra=extra or {},
+    )
+
+
+# --- the no-calibration contract ---------------------------------------------
+
+
+def test_resolvers_keep_historical_defaults_without_calibration(no_calibration):
+    """With no calibration active, every `auto` knob is its historical
+    default — the strictly-additive contract the subsystem ships under."""
+    assert active_model() is None
+    assert recommendation("chacha_impl") is None
+    assert resolve_chacha_impl("auto")[0] == "pallas"
+    assert resolve_coalesce("auto") is True
+    assert resolve_halt_loop(None) == "while"
+    assert resolve_chunk_growth("auto") == 2
+    assert resolve_capacity_factor() == 2.0
+    assert resolve_bucket_growth() == 2.0
+    assert resolve_max_resident("auto") is None
+
+
+# --- synthetic model drives the resolvers ------------------------------------
+
+
+def test_model_recommendations_drive_auto_resolvers(monkeypatch):
+    monkeypatch.delenv(CHACHA_IMPL_ENV, raising=False)
+    monkeypatch.delenv(CALIBRATION_ENV, raising=False)
+    model = CostModel(_cal(jnp_block=0.0001, pallas_block=1.0))  # jnp cheapest
+    set_active_model(model)
+    try:
+        assert model.recommend("chacha_impl") == "jnp"
+        assert resolve_chacha_impl("auto") == ("jnp", True)
+        # an explicit impl and the environment still BOTH outrank the model
+        assert resolve_chacha_impl("pallas-interpret") == ("pallas", True)
+        monkeypatch.setenv(CHACHA_IMPL_ENV, "pallas-interpret")
+        assert resolve_chacha_impl("auto") == ("pallas", True)
+        monkeypatch.delenv(CHACHA_IMPL_ENV, raising=False)
+
+        # non-negative probed costs: coalesced wire + 'while' loop always win
+        assert resolve_coalesce("auto") is True
+        assert resolve_halt_loop(None) == "while"
+        # the sim-backed knobs come from the model's candidate grids
+        assert resolve_chunk_growth("auto") in (2, 3, 4)
+        assert resolve_bucket_growth() in (1.5, 2.0, 4.0)
+        # the model's 'unbounded' answer maps to the None cap
+        assert model.recommend("max_resident") == "unbounded"
+        assert resolve_max_resident("auto") is None
+    finally:
+        clear_active_model()
+
+
+def test_capacity_factor_only_from_measured_extra():
+    """No probe may shrink the overflow headroom: the model recommends a
+    non-default capacity factor only when the calibration carries a
+    deployment-measured one."""
+    set_active_model(CostModel(_cal()))
+    try:
+        assert resolve_capacity_factor() == 2.0
+    finally:
+        clear_active_model()
+    set_active_model(CostModel(_cal(extra={"capacity_factor": 3.5})))
+    try:
+        assert resolve_capacity_factor() == 3.5
+    finally:
+        clear_active_model()
+
+
+def test_timing_model_prices_knob_vectors():
+    """The per-vector TimingModel hooks hillclimb cell K relies on."""
+    model = CostModel(_cal())
+    base = model.timing_model()
+    assert base.xla_compile_s == pytest.approx(8.0 + 2.0)
+    assert model.timing_model(loop_impl="masked_scan").xla_compile_s == \
+        pytest.approx(2 * base.xla_compile_s)
+    assert model.timing_model(coalesce=False).net_latency_s == \
+        pytest.approx(2 * base.net_latency_s)
+    # impl selects the cipher probe's bandwidth
+    fast = model.timing_model(impl="pallas")
+    slow = model.timing_model(impl="jnp")
+    assert fast.crypto_bw_bytes_s > slow.crypto_bw_bytes_s
+
+
+# --- persistence + activation ------------------------------------------------
+
+
+def test_save_load_roundtrip_keyed_by_backend(tmp_path):
+    path = str(tmp_path / "calib.json")
+    cal = _cal()
+    save_calibration(cal, path)
+    assert load_calibration(path, backend="cpu", n_devices=1) == cal
+    # a calibration probed on a different shape never applies
+    assert load_calibration(path, backend="tpu", n_devices=1) is None
+    assert load_calibration(path, backend="cpu", n_devices=8) is None
+    # a second entry merges instead of clobbering
+    other = Calibration(**{**cal.to_dict(), "backend": "tpu", "n_devices": 8})
+    save_calibration(other, path)
+    assert load_calibration(path, backend="cpu", n_devices=1) == cal
+    assert load_calibration(path, backend="tpu", n_devices=8) == other
+
+
+def test_active_model_from_env(tmp_path, monkeypatch):
+    path = tmp_path / "calib.json"
+    save_calibration(_cal(), str(path))
+    monkeypatch.setenv(CALIBRATION_ENV, str(path))
+    clear_active_model()
+    try:
+        model = active_model()
+        assert isinstance(model, CostModel) and model.cal == _cal()
+        assert recommendation("max_resident") == "unbounded"
+        # explicit None FORCES the model off even with the env var set
+        set_active_model(None)
+        assert active_model() is None
+    finally:
+        clear_active_model()
+    # unreadable / corrupt files resolve to no model, never an error
+    monkeypatch.setenv(CALIBRATION_ENV, str(tmp_path / "missing.json"))
+    assert active_model() is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("not json")
+    monkeypatch.setenv(CALIBRATION_ENV, str(bad))
+    clear_active_model()
+    try:
+        assert active_model() is None
+    finally:
+        clear_active_model()
+
+
+# --- trace-driven predictions ------------------------------------------------
+
+
+def _runner(secure):
+    mesh = make_mesh((1,), ("data",))
+
+    def map_fn(state, inputs, r):
+        keys = jnp.arange(inputs["x"].shape[0], dtype=jnp.int32) % 4
+        return keys, {"x": inputs["x"]}
+
+    def reduce_fn(state, keys, values, valid, r):
+        s = jnp.sum(jnp.where(valid, values["x"], 0.0))
+        return {"s": state["s"] + lax.psum(s, "data")}, {"s": s}
+
+    spec = IterativeSpec(map_fn=map_fn, reduce_fn=reduce_fn, n_rounds=2)
+    return make_iterative_runner(spec, mesh, "data", secure=secure)
+
+
+def test_trace_workload_reads_the_programs_own_wire():
+    sec = SecureShuffleConfig(
+        key_words=chacha.key_to_words(bytes(range(32))),
+        nonce_words=chacha.nonce_to_words(b"\x05" * 12))
+    inputs = {"x": jnp.ones((16,), jnp.float32)}
+    state = {"s": jnp.float32(0)}
+    trace = trace_workload(_runner(sec), inputs, state,
+                           n_shards=1, n_local_items=16)
+    assert trace.secure and trace.coalesced
+    assert trace.wire_bytes > 0 and trace.collectives >= 1
+    # coalesced single wire: one encrypt + one decrypt launch per round
+    assert trace.keystream_launches == 2
+    assert trace.keystream_blocks > 0 and trace.blocks_per_launch_row >= 1
+    assert trace.n_eqns > 0
+
+    model = CostModel(_cal())
+    assert model.predict_wire_bytes(trace) == trace.wire_bytes
+    pred = model.predict_round_us(trace)
+    assert pred > 0
+    # a costlier cipher probe must predict a costlier secure round
+    dearer = CostModel(_cal(pallas_block=10.0, jnp_block=20.0))
+    assert dearer.predict_round_us(trace) > pred
+    # compile prediction respects the plain-XLA floor
+    floor = (model.cal.compile["base_s"]
+             + trace.n_eqns * model.cal.compile["s_per_eqn"])
+    assert model.predict_compile_s(trace) >= floor
+
+    plain = trace_workload(_runner(None), inputs, state,
+                           n_shards=1, n_local_items=16)
+    assert not plain.secure and plain.keystream_launches == 0
+    assert model.predict_round_us(plain) < pred
+
+
+# --- kernel padding model ----------------------------------------------------
+
+
+def test_effective_blocks_padding_rules():
+    # jnp oracle: exactly the blocks the wire needs
+    assert effective_blocks(4, 3, "jnp", True) == 12
+    # interpret-mode pallas: rows^2 x blocks padded to an 8-multiple (min 8)
+    assert effective_blocks(1, 1, "pallas", True) == 8
+    assert effective_blocks(1, 9, "pallas", True) == 16
+    assert effective_blocks(8, 3, "pallas", True) == 8 * 8 * 8
+    # compiled pallas: rows x full 128-lane VREG multiples
+    assert effective_blocks(2, 1, "pallas", False) == 2 * 128
+    assert effective_blocks(2, 130, "pallas", False) == 2 * 256
+    # degenerate launches cost nothing
+    assert effective_blocks(0, 4, "pallas", True) == 0
+    assert effective_blocks(4, 0, "jnp", False) == 0

@@ -18,7 +18,7 @@ from repro.core.shuffle import (
     wire_accounting,
 )
 from repro.crypto import chacha
-from repro.runtime.sim import AdmissionSim, burst_trace, straggler_trace
+from repro.runtime.sim import AdmissionSim, SimJob, burst_trace, straggler_trace
 from repro.serve.service import (
     BUCKET_GROWTH_ENV,
     MAX_RUNNERS_ENV,
@@ -71,7 +71,7 @@ def test_bucket_ladder_properties():
         bucket_for(4, multiple=0)
 
 
-def test_bucket_growth_resolver_env(monkeypatch):
+def test_bucket_growth_resolver_env(monkeypatch, no_calibration):
     monkeypatch.delenv(BUCKET_GROWTH_ENV, raising=False)
     assert resolve_bucket_growth() == 2.0
     assert resolve_bucket_growth(1.5) == 1.5
@@ -93,7 +93,7 @@ def test_bucket_growth_resolver_env(monkeypatch):
     assert "$" not in str(ei.value)
 
 
-def test_max_resident_resolver_env(monkeypatch):
+def test_max_resident_resolver_env(monkeypatch, no_calibration):
     monkeypatch.delenv(MAX_RUNNERS_ENV, raising=False)
     assert resolve_max_resident("auto") is None
     assert resolve_max_resident(None) is None
@@ -212,6 +212,110 @@ def test_submit_validation_and_closed_service():
     svc.close()
     with pytest.raises(RuntimeError, match="closed"):
         svc.submit_grep(np.zeros((4,), np.int32), [1])
+
+
+# --- two-level priority admission ---------------------------------------------
+
+
+def test_priority_submit_admits_ahead_of_fifo():
+    """With one slot busy, a later priority submit is admitted before the
+    earlier normal one; the active job is never preempted."""
+    import time as _time
+
+    toks = (np.arange(16) % 5).astype(np.int32)
+    with SecureJobService(_mesh1(), max_concurrent=1) as svc:
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit_grep(toks, [1], priority=-1)
+        ha = svc.submit_grep(toks, [1], n_rounds=2)          # fills the slot
+        # wait until A OWNS the slot (admitted, compiling its runner) so B
+        # and C verifiably queue behind it
+        deadline = _time.perf_counter() + 120
+        while ha.started_at is None:
+            assert _time.perf_counter() < deadline, "job A never started"
+            _time.sleep(0.001)
+        hb = svc.submit_grep(toks, [2], n_rounds=2)          # queues (normal)
+        hc = svc.submit_grep(toks, [3], n_rounds=2, priority=1)  # jumps queue
+        for h in (ha, hb, hc):
+            h.result(timeout=600)
+    assert (ha.priority, hb.priority, hc.priority) == (0, 0, 1)
+    # A kept its slot (admission order, not preemption)...
+    assert ha.started_at < hc.started_at
+    # ...and C was admitted ahead of the earlier-submitted B
+    assert hc.started_at < hb.started_at
+    assert hc.finished_at < hb.started_at  # one slot: strictly serial
+    # keystream budgets still reserve in SUBMIT order (disjointness is
+    # assigned at submit time, independent of admission order)
+    assert hb.round_base == ha.round_base + ha.max_rounds
+    assert hc.round_base == hb.round_base + hb.max_rounds
+
+
+def test_admission_sim_priority_mirrors_service():
+    """The sim's two-level admission: a priority job among the arrived
+    prefix admits first; a priority job that has NOT arrived yet changes
+    nothing; total work (makespan) is unchanged either way."""
+    from dataclasses import replace as dc_replace
+
+    sim = AdmissionSim(max_concurrent=1, min_chunk=8, max_chunk=8)
+    jobs = [SimJob(0.0, 4096, 8), SimJob(0.0, 4096, 8),
+            SimJob(0.0, 4096, 8, priority=1)]
+    flat = [dc_replace(j, priority=0) for j in jobs]
+    r, r_flat = sim.run(jobs, "bucketed"), sim.run(flat, "bucketed")
+    lat, lat_flat = r["per_job_latency_s"], r_flat["per_job_latency_s"]
+    # the priority job cut ahead of both normal jobs...
+    assert lat[2] < lat[0] < lat[1]
+    assert lat[2] < lat_flat[2]
+    # ...without creating or destroying work
+    assert r["makespan_s"] == pytest.approx(r_flat["makespan_s"])
+
+    # a priority job arriving after the queue drains cannot jump anything:
+    # identical replay to the all-normal trace
+    late = [SimJob(0.0, 4096, 8), SimJob(0.0, 4096, 8),
+            SimJob(1e6, 4096, 8, priority=1)]
+    late_flat = [dc_replace(j, priority=0) for j in late]
+    assert sim.run(late, "bucketed") == sim.run(late_flat, "bucketed")
+
+
+# --- LRU eviction under interleaved live jobs ---------------------------------
+
+
+def test_lru_eviction_of_live_jobs_runner_is_bitidentical():
+    """Residency cap 1 + two interleaved jobs: every scheduler pass evicts
+    the OTHER live job's runner, which is rebuilt (a fresh miss) on its next
+    chunk. Results must be bit-identical to an unbounded cache — eviction
+    costs recompiles, never correctness (round offsets, carried state, and
+    keystream ranges live outside the evicted program)."""
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, 7, (24,)).astype(np.int32)
+
+    def run(cache):
+        with SecureJobService(_mesh1(), secure=_secure_cfg(), cache=cache,
+                              max_concurrent=2) as svc:
+            # different pattern sets -> different cache keys; fixed chunk
+            # size 1 -> each job needs its runner on every pass
+            ha = svc.submit_grep(toks, [1, 2], n_rounds=2,
+                                 min_chunk=1, max_chunk=1)
+            hb = svc.submit_grep(toks, [3, 4, 5], n_rounds=2,
+                                 min_chunk=1, max_chunk=1)
+            return ha.result(timeout=600), hb.result(timeout=600)
+
+    capped = RunnerCache(max_resident=1)
+    ra_c, rb_c = run(capped)
+    s = capped.stats()
+    assert s["max_resident"] == 1 and s["resident"] <= 1
+    # both jobs LIVE while their runners thrash: at least one eviction per
+    # extra rebuild, and every post-eviction chunk re-misses
+    assert s["evictions"] >= 2
+    assert s["misses"] >= 4
+
+    unbounded = RunnerCache()
+    ra_u, rb_u = run(unbounded)
+    assert unbounded.stats()["evictions"] == 0
+    assert unbounded.stats()["misses"] == 2  # one compile per job, then hits
+    for a, b in [(ra_c, ra_u), (rb_c, rb_u)]:
+        assert a.keys() == b.keys()
+        for key in a:
+            np.testing.assert_array_equal(np.asarray(a[key]),
+                                          np.asarray(b[key]), err_msg=key)
 
 
 # --- service: interleaved vs serial (queue depth > 1) ------------------------

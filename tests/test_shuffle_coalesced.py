@@ -248,7 +248,7 @@ def test_jaxpr_collectives_per_plaintext_round(coalesce, want_a2a):
 # --- selector resolution ------------------------------------------------------
 
 
-def test_resolve_coalesce_env_and_explicit(monkeypatch):
+def test_resolve_coalesce_env_and_explicit(monkeypatch, no_calibration):
     monkeypatch.delenv(COALESCE_ENV, raising=False)
     assert resolve_coalesce("auto") is True
     assert resolve_coalesce(None) is True

@@ -171,7 +171,7 @@ def test_rfc_encrypt_through_rows_entry_point(impl):
 # --- impl selection -----------------------------------------------------------
 
 
-def test_impl_resolution_env_and_explicit(monkeypatch):
+def test_impl_resolution_env_and_explicit(monkeypatch, no_calibration):
     monkeypatch.delenv(CHACHA_IMPL_ENV, raising=False)
     assert resolve_chacha_impl("auto")[0] == "pallas"
     assert resolve_chacha_impl("jnp") == ("jnp", True)
